@@ -1,0 +1,71 @@
+"""Per-term access micro-benchmark: the paper's random-access distinction.
+
+Chunked lists (FBB) cannot random-access: reaching component k walks k NEXT
+pointers — on TPU a sequential ``lax.scan`` with loop-carried gathers.  SQ
+arrays resolve any item through the dope vector — one parallel gather.  This
+bench times both on identical content at growing list lengths and reports
+the access-latency ratio (the cost FBB pays for its cheaper memory layout).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pool import IndexConfig, init_state
+from repro.core.inversion import make_append_fn
+from repro.core.query import make_postings_fn
+
+OUT = os.environ.get("BENCH_OUT", "bench_out")
+
+
+def bench_method(method: str, list_len: int, n_queries: int = 256,
+                 reps: int = 5) -> float:
+    cfg = IndexConfig(method=method, vocab=n_queries,
+                      pool_words=int(list_len * n_queries * 1.7) + (1 << 14),
+                      max_chunks=1 << 18, dope_words=1 << 18,
+                      max_len_per_term=1 << 22)
+    step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+    state = init_state(cfg)
+    rng = np.random.default_rng(0)
+    B = 1 << 14
+    total = list_len * n_queries
+    doc = 0
+    while doc < total:
+        terms = rng.integers(0, n_queries, B).astype(np.int32)
+        state = step(state, jnp.asarray(terms),
+                     jnp.arange(doc, doc + B, dtype=jnp.int32))
+        doc += B
+    fn = jax.jit(jax.vmap(make_postings_fn(cfg, 64), in_axes=(None, 0)))
+    qs = jnp.arange(n_queries, dtype=jnp.int32)
+    jax.block_until_ready(fn(state, qs))              # compile
+    best = 1e9
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(state, qs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    rows = []
+    print("list_len,fbb_us_per_query,sqa_us_per_query,fbb/sqa")
+    for list_len in (64, 512, 4096):
+        t = {}
+        for method in ("fbb", "sqa"):
+            t[method] = bench_method(method, list_len) / 256 * 1e6
+        ratio = t["fbb"] / t["sqa"]
+        print(f"{list_len},{t['fbb']:.1f},{t['sqa']:.1f},{ratio:.2f}")
+        rows.append(dict(list_len=list_len, fbb_us=t["fbb"],
+                         sqa_us=t["sqa"], ratio=ratio))
+    with open(os.path.join(OUT, "access_bench.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

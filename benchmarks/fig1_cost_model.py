@@ -1,0 +1,69 @@
+"""Figure 1 reproduction: allocation + mean cost curves, FBB vs SQA.
+
+Left panel: allocated words vs postings count.  Right panel: mean cost
+(waste + pointer words [+ discarded dope]) over lengths 1..10^6.
+Emits CSV curves + the calibration table against the paper's reported
+numbers (FBB 2000 chunks / cost 1688; SQA 1488 / 1024 / A 3034 / B 1739).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.cost_model import method_curves, summarize, PAPER_TARGETS
+from repro.core.schedules import get_schedule
+
+OUT = os.environ.get("BENCH_OUT", "bench_out")
+
+
+def run(max_len: int = 1_000_000) -> dict:
+    os.makedirs(OUT, exist_ok=True)
+    curves = {}
+    for name in ("fbb", "sqa", "sqa_linear", "doubling"):
+        c = method_curves(get_schedule(name, 1 << 21), max_len)
+        curves[name] = c
+    # sampled curves (log-spaced) to CSV
+    idx = np.unique(np.logspace(0, np.log10(max_len - 1), 512).astype(int))
+    with open(os.path.join(OUT, "fig1_curves.csv"), "w") as f:
+        f.write("length," + ",".join(
+            f"{n}_alloc,{n}_cost" + (",%s_cost_a" % n if curves[n].cost_a
+                                     is not None else "")
+            for n in curves) + "\n")
+        for i in idx:
+            row = [str(i + 1)]
+            for n, c in curves.items():
+                row += [str(int(c.alloc[i])), str(int(c.cost[i]))]
+                if c.cost_a is not None:
+                    row.append(str(int(c.cost_a[i])))
+            f.write(",".join(row) + "\n")
+
+    calib = summarize(max_len)
+    with open(os.path.join(OUT, "fig1_calibration.json"), "w") as f:
+        json.dump(calib, f, indent=1)
+    return calib
+
+
+def main() -> None:
+    calib = run()
+    p = PAPER_TARGETS
+    print("method,stat,ours,paper,rel_err")
+    rows = [
+        ("fbb", "n_comp", calib["fbb"]["n_comp"], p["fbb"]["n_comp"]),
+        ("fbb", "mean_cost", calib["fbb"]["mean_cost"],
+         p["fbb"]["mean_cost"]),
+        ("sqa", "n_comp", calib["sqa"]["n_comp"], p["sqa"]["n_comp"]),
+        ("sqa", "max_size", calib["sqa"]["max_size"], p["sqa"]["max_size"]),
+        ("sqa_linear", "mean_cost_b", calib["sqa_linear"]["mean_cost_b"],
+         p["sqa"]["mean_cost_b"]),
+        ("sqa", "mean_cost_a", calib["sqa"]["mean_cost_a"],
+         p["sqa"]["mean_cost_a"]),
+    ]
+    for m, s, ours, paper in rows:
+        rel = abs(ours - paper) / max(abs(paper), 1e-9)
+        print(f"{m},{s},{ours},{paper},{rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

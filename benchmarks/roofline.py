@@ -1,0 +1,58 @@
+"""Roofline table: aggregates dryrun_out/*.json into EXPERIMENTS-ready rows.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir dryrun_out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                f"{r.get('error', '')[:40]} |||||||")
+    t = r["terms"]
+    mem = (r["fit"]["memory"]["argument_bytes"]
+           + r["fit"]["memory"]["temp_bytes"]) / 2**30
+    ratio = r.get("useful_ratio")
+    return ("| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {n:.3f} | "
+            "{dom} | {mem:.1f} | {ratio} | {mfu:.1%} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=t["compute_s"], m=t["memory_s"], n=t["collective_s"],
+                dom=r["dominant"].replace("_s", ""), mem=mem,
+                ratio=("%.2f" % ratio) if ratio else "-",
+                mfu=(t["compute_s"] / max(max(t.values()), 1e-12))))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun_out")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | GB/dev | useful | roofline-frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    ok = fail = 0
+    for r in rows:
+        print(fmt_row(r))
+        ok += bool(r.get("ok"))
+        fail += not r.get("ok")
+    print(f"\n{ok} ok, {fail} failed")
+
+
+if __name__ == "__main__":
+    main()

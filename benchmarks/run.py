@@ -1,0 +1,61 @@
+"""Benchmark driver: one entry per paper table/figure + beyond-paper.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  fig1      — analytical cost curves + calibration vs the paper's numbers
+  table1    — FBB vs SQA build/traverse/memory/rate on synthetic corpora
+  paged_kv  — growth policies as KV page allocators (beyond-paper)
+  roofline  — aggregates dryrun_out/*.json (if present)
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small corpora only (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("fig1"):
+        print("== fig1: analytical cost model ==", flush=True)
+        from . import fig1_cost_model
+        fig1_cost_model.main()
+
+    if want("table1"):
+        print("\n== table1: FBB vs SQA indexing ==", flush=True)
+        from . import table1_indexing
+        corpora = ("tiny",) if args.fast else ("tiny", "synth_s")
+        table1_indexing.main(corpora=corpora, runs=1 if args.fast else 2)
+
+    if want("paged_kv"):
+        print("\n== paged_kv: growth policies as KV allocators ==",
+              flush=True)
+        from . import paged_kv_bench
+        paged_kv_bench.main()
+
+    if want("access") and not args.fast:
+        print("\n== access: per-term random access, FBB chain vs SQA dope ==",
+              flush=True)
+        from . import access_bench
+        access_bench.main()
+
+    if want("roofline"):
+        import glob
+        if glob.glob("dryrun_out/*.json"):
+            print("\n== roofline (from dryrun_out/) ==", flush=True)
+            from . import roofline
+            sys.argv = ["roofline"]
+            roofline.main()
+        else:
+            print("\n(roofline: no dryrun_out/*.json yet — run "
+                  "repro.launch.dryrun first)")
+
+
+if __name__ == "__main__":
+    main()

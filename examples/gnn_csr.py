@@ -1,0 +1,47 @@
+"""CSR adjacency construction IS text inversion: build a graph's CSR with
+the paper's chunked index, then train NequIP on neighbor-sampled batches.
+
+    PYTHONPATH=src python examples/gnn_csr.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.gnn_common import (csr_from_edges, csr_via_index,
+                                     NeighborSampler)
+from repro.models.nequip import init_nequip, nequip_energy_forces
+from repro.core.query import make_postings_fn
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, e = 2000, 16000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+
+    # adjacency via the paper's inversion engine (src=term, dst=posting)
+    state, icfg = csr_via_index(src, dst, n, method="fbb")
+    indptr, indices = csr_from_edges(src, dst, n)
+    fn = jax.jit(make_postings_fn(icfg, 128))
+    v = int(np.argmax(np.diff(indptr)))              # busiest node
+    vals, cnt = fn(state, v)
+    print(f"node {v}: degree {int(cnt)} (numpy CSR: "
+          f"{indptr[v+1]-indptr[v]}) — chunked index agrees:",
+          sorted(np.asarray(vals)[:int(cnt)].tolist())
+          == sorted(indices[indptr[v]:indptr[v+1]].tolist()))
+
+    # neighbor-sampled NequIP training step on the CSR
+    cfg = get_config("nequip")
+    params = init_nequip(cfg, jax.random.PRNGKey(0))
+    sampler = NeighborSampler(indptr, indices, seed=1)
+    seeds = rng.choice(n, 64, replace=False)
+    g = sampler.sample(seeds, fanouts=(10, 5), n_pad=4096, e_pad=4096)
+    en, forces = nequip_energy_forces(cfg, params, g)
+    print(f"sampled subgraph: {int(np.asarray(g.node_mask).sum())} nodes, "
+          f"{int(np.asarray(g.edge_mask).sum())} edges -> "
+          f"E={float(en):.4f}, |F|max={float(jnp.abs(forces).max()):.4f}")
+
+
+if __name__ == "__main__":
+    main()

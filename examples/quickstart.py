@@ -1,0 +1,50 @@
+"""Quickstart: build an inverted index with FBB and SQA, compare costs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IndexConfig, init_state, make_append_fn,
+                        make_postings_fn, paper_memory_report, summarize)
+from repro.data.tokenizer import HashTokenizer
+
+RECORDS = [
+    "the quick brown fox jumps over the lazy dog",
+    "pack my box with five dozen liquor jugs",
+    "the five boxing wizards jump quickly",
+    "how vexingly quick daft zebras jump",
+    "the dog barks at the quick fox",
+]
+
+
+def main():
+    # 1) the paper's analytical comparison at l = 1e6 (Figure 1)
+    calib = summarize()
+    print("Fig-1 calibration (ours vs paper):")
+    print(f"  FBB: {calib['fbb']['n_comp']} chunks (paper 2000), "
+          f"mean cost {calib['fbb']['mean_cost']:.0f} (paper 1688)")
+    print(f"  SQA: {calib['sqa']['n_comp']} segments (paper 1488), "
+          f"max {calib['sqa']['max_size']} (paper 1024)")
+
+    # 2) index a tiny corpus with both methods
+    tok = HashTokenizer(vocab=1 << 12)
+    terms, docs = tok.invert_records(RECORDS)
+    import jax
+    for method in ("fbb", "sqa"):
+        cfg = IndexConfig(method=method, vocab=1 << 12, pool_words=1 << 14,
+                          max_chunks=1 << 12, dope_words=1 << 12)
+        step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+        state = step(init_state(cfg), jnp.asarray(terms), jnp.asarray(docs))
+        rep = paper_memory_report(state, cfg)
+        print(f"\n{method}: {rep['postings']} postings, "
+              f"{rep['n_components']} components, "
+              f"alloc {rep['alloc_words']} words")
+        # query: which records contain 'quick'?
+        q = tok.encode("quick")[0]
+        vals, n = jax.jit(make_postings_fn(cfg, 16))(state, q)
+        print(f"  'quick' -> records {np.asarray(vals)[:int(n)].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

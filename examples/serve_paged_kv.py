@@ -1,0 +1,15 @@
+"""Serve a small LM with batched requests over a growth-policy paged KV
+cache — the paper's FBB/SQA comparison live in the serving path.
+
+    PYTHONPATH=src python examples/serve_paged_kv.py --policy fbb
+    PYTHONPATH=src python examples/serve_paged_kv.py --policy sqa
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "qwen2-7b", "--policy", "fbb",
+                     "--batch", "4", "--tokens", "48"]
+    main()

@@ -1,0 +1,17 @@
+"""Train a small LM for a few hundred steps with the fault-tolerant loop.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-8b --steps 300
+
+Uses the reduced config (the full configs are dry-run-only on CPU); shows
+checkpointed, resumable training with the deterministic data pipeline —
+kill it mid-run and re-invoke to watch it resume from the last checkpoint.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "qwen3-8b", "--steps", "300", "--batch", "16",
+                     "--seq", "128"]
+    main()

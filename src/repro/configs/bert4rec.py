@@ -1,0 +1,7 @@
+"""bert4rec — bidirectional sequential recommender. [arXiv:1904.06690]"""
+from .base import RecsysConfig, register
+
+CONFIG = RecsysConfig(
+    name="bert4rec", interaction="bidir-seq", embed_dim=64, n_blocks=2,
+    n_heads=2, seq_len=200, n_items=1_000_000, n_negatives=512)
+register(CONFIG)

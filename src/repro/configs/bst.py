@@ -1,0 +1,7 @@
+"""bst — Behavior Sequence Transformer (Alibaba). [arXiv:1905.06874]"""
+from .base import RecsysConfig, register
+
+CONFIG = RecsysConfig(
+    name="bst", interaction="transformer-seq", embed_dim=32, seq_len=20,
+    n_blocks=1, n_heads=8, n_items=1 << 20, mlp=(1024, 512, 256))
+register(CONFIG)

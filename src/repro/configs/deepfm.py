@@ -1,0 +1,7 @@
+"""deepfm — FM + deep MLP over 39 sparse fields. [arXiv:1703.04247]"""
+from .base import RecsysConfig, register
+
+CONFIG = RecsysConfig(
+    name="deepfm", interaction="fm", embed_dim=10, n_sparse=39,
+    field_vocab=1 << 20, mlp=(400, 400, 400))
+register(CONFIG)

@@ -1,0 +1,13 @@
+"""granite-3-8b — dense GQA LM. [hf:ibm-granite/granite-3.0-8b-base]
+
+Vocab is 49,155 in the source config; padded Megatron-style to 49,664
+(= 97 x 512) so the vocab-sharded embedding/logits divide any production
+mesh axis.  Ids >= 49,155 are never produced by data — padding rows train
+toward -inf mass exactly as in Megatron vocab padding.
+"""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="granite-3-8b", n_layers=40, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_head=128, d_ff=12800, vocab=49664)
+register(CONFIG)

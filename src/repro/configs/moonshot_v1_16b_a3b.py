@@ -1,0 +1,9 @@
+"""moonshot-v1-16b-a3b — Moonlight-style MoE LM (64 experts, top-6).
+[hf:moonshotai/Moonlight-16B-A3B]"""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="moonshot-v1-16b-a3b", n_layers=48, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_head=128, d_ff=1408, vocab=163840,
+    moe=True, n_experts=64, top_k=6)
+register(CONFIG)

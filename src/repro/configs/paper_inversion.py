@@ -1,0 +1,24 @@
+"""The paper's own workload: distributed text inversion (FBB vs SQA).
+
+Registered as an 11th architecture so the paper's technique has its own
+dry-run + roofline cells on the flat (term-sharded) production mesh; the
+``invert_fbb`` / ``invert_sqa`` shapes make the method comparison visible in
+the roofline table itself.
+"""
+import dataclasses
+
+from .base import register
+
+
+@dataclasses.dataclass(frozen=True)
+class InversionConfig:
+    name: str = "paper-inversion"
+    vocab_per_shard: int = 1 << 16       # x256 shards ~= clueTitles vocab
+    pool_words_per_shard: int = 1 << 24
+    max_chunks_per_shard: int = 1 << 21
+    dope_words_per_shard: int = 1 << 21
+    family: str = "inversion"
+
+
+CONFIG = InversionConfig()
+register(CONFIG)

@@ -1,0 +1,7 @@
+"""qwen3-8b — dense GQA LM with qk_norm. [hf:Qwen/Qwen3-8B]"""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="qwen3-8b", n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_head=128, d_ff=12288, vocab=151936, qk_norm=True)
+register(CONFIG)

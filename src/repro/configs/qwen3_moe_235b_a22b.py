@@ -1,0 +1,9 @@
+"""qwen3-moe-235b-a22b — Qwen3 MoE (128 experts, top-8).
+[hf:Qwen/Qwen3-235B-A22B family]"""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+    n_kv_heads=4, d_head=128, d_ff=1536, vocab=151936,
+    qk_norm=True, moe=True, n_experts=128, top_k=8)
+register(CONFIG)

@@ -1,0 +1,77 @@
+"""Assigned input-shape sets, one per architecture family (40 cells)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+__all__ = ["ShapeSpec", "SHAPES", "shapes_for", "cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                      # 'train' | 'prefill' | 'decode' |
+    #                              # 'serve' | 'graph' | 'retrieval'
+    seq_len: int = 0
+    global_batch: int = 0
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    n_graphs: int = 0
+    n_candidates: int = 0
+
+
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", seq_len=4096, global_batch=256),
+    ShapeSpec("prefill_32k", "prefill", seq_len=32768, global_batch=32),
+    ShapeSpec("decode_32k", "decode", seq_len=32768, global_batch=128),
+    # one-token decode against a 500k KV cache is O(L), not O(L^2): we run
+    # this cell for the full-attention LMs too (DESIGN.md §long_500k).
+    ShapeSpec("long_500k", "decode", seq_len=524288, global_batch=1),
+)
+
+GNN_SHAPES = (
+    ShapeSpec("full_graph_sm", "graph", n_nodes=2708, n_edges=10556,
+              d_feat=1433),
+    ShapeSpec("minibatch_lg", "graph", n_nodes=232965, n_edges=114615892,
+              batch_nodes=1024, fanout=(15, 10)),
+    ShapeSpec("ogb_products", "graph", n_nodes=2449029, n_edges=61859140,
+              d_feat=100),
+    ShapeSpec("molecule", "graph", n_nodes=30, n_edges=64, n_graphs=128),
+)
+
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", global_batch=65536),
+    ShapeSpec("serve_p99", "serve", global_batch=512),
+    ShapeSpec("serve_bulk", "serve", global_batch=262144),
+    ShapeSpec("retrieval_cand", "retrieval", global_batch=1,
+              n_candidates=1_000_000),
+)
+
+INVERSION_SHAPES = (
+    # per-shard append batch 65536 -> 16.7M postings per step at 256 chips
+    ShapeSpec("invert_fbb", "invert", global_batch=65536 * 256),
+    ShapeSpec("invert_sqa", "invert", global_batch=65536 * 256),
+)
+
+SHAPES: Dict[str, Tuple[ShapeSpec, ...]] = {
+    "lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES,
+    "inversion": INVERSION_SHAPES,
+}
+
+
+def shapes_for(cfg) -> Tuple[ShapeSpec, ...]:
+    return SHAPES[cfg.family]
+
+
+def cells():
+    """All (arch, shape) dry-run cells in a stable order."""
+    from .base import list_configs, get_config
+    out = []
+    for name in list_configs():
+        cfg = get_config(name)
+        for sh in shapes_for(cfg):
+            out.append((cfg, sh))
+    return out

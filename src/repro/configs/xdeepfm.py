@@ -1,0 +1,7 @@
+"""xdeepfm — CIN + deep MLP over 39 sparse fields. [arXiv:1803.05170]"""
+from .base import RecsysConfig, register
+
+CONFIG = RecsysConfig(
+    name="xdeepfm", interaction="cin", embed_dim=10, n_sparse=39,
+    field_vocab=1 << 20, cin_layers=(200, 200, 200), mlp=(400, 400))
+register(CONFIG)

@@ -1,0 +1,20 @@
+# The paper's primary contribution: growth schedules for append-only
+# postings lists (FBB chunked lists vs SQA extensible arrays), realized as
+# pointer-free chunk pools + a batched, pjit-shardable inversion engine.
+from .schedules import Schedule, get_schedule, SCHEDULES
+from .cost_model import MethodCurves, method_curves, summarize, PAPER_TARGETS
+from .pool import IndexConfig, init_state, paper_memory_report
+from .inversion import make_append_fn, append_batch, build_index
+from .traversal import make_traverse_fn, traverse
+from .query import make_postings_fn, postings
+from .distributed import ShardedIndex, make_invert_step, init_sharded_state
+
+__all__ = [
+    "Schedule", "get_schedule", "SCHEDULES",
+    "MethodCurves", "method_curves", "summarize", "PAPER_TARGETS",
+    "IndexConfig", "init_state", "paper_memory_report",
+    "make_append_fn", "append_batch", "build_index",
+    "make_traverse_fn", "traverse",
+    "make_postings_fn", "postings",
+    "ShardedIndex", "make_invert_step", "init_sharded_state",
+]

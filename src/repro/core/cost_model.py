@@ -1,0 +1,96 @@
+"""Analytical cost model — reproduces the paper's §2 / Figure 1.
+
+For a postings list of length l, the *cost* of a method is the number of
+memory words required in excess of a single oracular array of length l,
+assuming one pointer == one posting == 1 word:
+
+  FBB:  cost(l) = alloc(l) - l            (internal fragmentation / waste)
+                + n_chunks(l)             (NEXT pointer per chunk)
+                + 2                       (HEAD + TAIL in the vocab entry)
+
+  SQA:  cost_B(l) = alloc(l) - l
+                  + dope_cap(l)           (dope slots incl. unused tail)
+                  + 1                     (vocab -> dope pointer)
+        cost_A(l) = cost_B(l) + discarded_dope(l)
+
+All quantities are closed-form in the schedule tables, so the whole Figure-1
+sweep over l = 1..10^6 is a handful of vectorized searchsorteds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .schedules import Schedule, get_schedule
+
+__all__ = ["MethodCurves", "method_curves", "summarize", "PAPER_TARGETS"]
+
+#: The paper's reported stats at l = 10^6 (see Table/Fig 1 discussion).
+PAPER_TARGETS = {
+    "fbb": dict(n_comp=2000, max_size=1597, mean_cost=1688.0),
+    "sqa": dict(n_comp=1488, max_size=1024, mean_cost_a=3034.0,
+                mean_cost_b=1739.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodCurves:
+    """Per-length allocation/cost curves for one method."""
+
+    name: str
+    lengths: np.ndarray        # int64[L] (1-based lengths)
+    alloc: np.ndarray          # allocated item words at each length
+    n_comp: np.ndarray         # number of components
+    cost: np.ndarray           # FBB cost / SQA cost_B
+    cost_a: np.ndarray | None  # SQA cost_A (None for chunked lists)
+
+    def mean_cost(self) -> float:
+        return float(self.cost.mean())
+
+    def mean_cost_a(self) -> float | None:
+        return None if self.cost_a is None else float(self.cost_a.mean())
+
+
+def method_curves(sched: Schedule, max_len: int = 1_000_000) -> MethodCurves:
+    l = np.arange(1, max_len + 1, dtype=np.int64)
+    n = np.searchsorted(sched.cumcap, l - 1, side="right") + 1
+    alloc = sched.cumcap[n - 1]
+    waste = alloc - l
+    if sched.has_next_ptr:
+        cost = waste + n + 2
+        return MethodCurves(sched.name, l, alloc, n, cost, None)
+    # extensible array: dope vector + discards
+    cap_idx = np.searchsorted(sched.dope_caps, n, side="left")
+    dope_cap = sched.dope_caps[cap_idx]
+    # total pointer words discarded before reaching this capacity
+    discarded = np.where(cap_idx > 0,
+                         sched.dope_caps_cum[np.maximum(cap_idx - 1, 0)], 0)
+    cost_b = waste + dope_cap + 1
+    cost_a = cost_b + discarded
+    return MethodCurves(sched.name, l, alloc, n, cost_b, cost_a)
+
+
+def summarize(max_len: int = 1_000_000) -> dict:
+    """Compute the calibration table vs the paper's reported numbers."""
+    out = {}
+    fbb = method_curves(get_schedule("fbb"), max_len)
+    sqa = method_curves(get_schedule("sqa"), max_len)
+    sqa_lin = method_curves(get_schedule("sqa_linear"), max_len)
+    nf = int(fbb.n_comp[-1])
+    out["fbb"] = dict(
+        n_comp=nf,
+        max_size=int(get_schedule("fbb").sizes[: nf].max()),
+        next_run_size=int(get_schedule("fbb").sizes[nf]),
+        mean_cost=fbb.mean_cost(),
+    )
+    for name, c in (("sqa", sqa), ("sqa_linear", sqa_lin)):
+        ns = int(c.n_comp[-1])
+        out[name] = dict(
+            n_comp=ns,
+            max_size=int(get_schedule(name).sizes[: ns].max()),
+            mean_cost_b=c.mean_cost(),
+            mean_cost_a=c.mean_cost_a(),
+        )
+    out["paper"] = PAPER_TARGETS
+    return out

@@ -1,0 +1,147 @@
+"""Distributed text inversion: term-sharded index, MoE-style dispatch.
+
+Documents stream in sharded over the device axis; the index itself is
+*term-sharded* (shard ``s`` owns the contiguous term range
+``[s*V_loc, (s+1)*V_loc)``), so every append must first be routed to its
+owner.  The routing is exactly an MoE token dispatch: bucket-by-owner with a
+fixed per-destination capacity, one ``all_to_all``, then the local batched
+append step from ``inversion.py``.
+
+Capacity semantics mirror MoE capacity-factor routing: pairs beyond
+``cap_per_dest`` are dropped and counted in the ``route_drop`` counter
+(tests use a generous factor for exactness; production sizes it like an MoE
+capacity factor).  Postings order within a term is (source shard, position) —
+deterministic under any scheduling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .inversion import make_append_fn, _excl_cumsum
+from .pool import IndexConfig, init_state
+
+__all__ = ["ShardedIndex", "make_invert_step", "init_sharded_state"]
+
+State = Dict[str, Any]
+
+
+def init_sharded_state(cfg: IndexConfig, n_shards: int) -> State:
+    """Global state for a term-sharded index: shard-major concatenation.
+
+    ``cfg`` describes ONE shard (cfg.vocab = per-shard vocab, cfg.pool_words =
+    per-shard pool).  Leaf ``x`` of the global state has shape
+    ``[n_shards * local_dim, ...]`` and is sharded on dim 0.
+    """
+    local = init_state(cfg)
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (n_shards,) + (1,) * x.ndim).reshape(
+            (n_shards * x.shape[0],) if x.ndim else (n_shards,)),
+        local)
+
+
+def make_invert_step(cfg: IndexConfig, mesh, axis: str = "shard",
+                     cap_per_dest: int | None = None):
+    """Build the sharded ``(state, terms, docs) -> state`` step.
+
+    ``cfg.vocab`` is the PER-SHARD vocab; global vocab = vocab * n_shards.
+    ``terms``/``docs`` are the global batch, sharded over ``axis``.
+    """
+    n = mesh.shape[axis]
+    V_loc = cfg.vocab
+    append = make_append_fn(cfg)
+
+    def local_step(state: State, terms, docs) -> State:
+        B = terms.shape[0]
+        cap = cap_per_dest or max(1, (2 * B) // n)
+        sidx = jax.lax.axis_index(axis)
+        valid = (terms >= 0) & (terms < V_loc * n)
+        owner = jnp.where(valid, terms // V_loc, n)      # n == drop bucket
+
+        # position within each owner bucket (sort-based, stable)
+        order = jnp.argsort(owner, stable=True)
+        owner_s = owner[order]
+        iota = jnp.arange(B, dtype=jnp.int32)
+        seg_start = jnp.concatenate(
+            [jnp.ones((1,), bool), owner_s[1:] != owner_s[:-1]])
+        anchor = jax.lax.cummax(jnp.where(seg_start, iota, 0))
+        pos = iota - anchor
+        keep = (owner_s < n) & (pos < cap)
+        slot = jnp.where(keep, owner_s * cap + pos, n * cap)
+
+        send_t = jnp.full((n * cap + 1,), -1, jnp.int32).at[slot].set(
+            terms[order], mode="drop")[:-1].reshape(n, 1, cap)
+        send_d = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
+            docs[order], mode="drop")[:-1].reshape(n, 1, cap)
+
+        # one packed exchange instead of two (§Perf cell C: halves the
+        # collective op count at identical byte volume)
+        packed = jnp.concatenate([send_t, send_d], axis=1)   # [n, 2, cap]
+        recv = jax.lax.all_to_all(packed, axis, 0, 0, tiled=True)
+        recv_t, recv_d = recv[:, 0], recv[:, 1]
+        # [n*cap] pairs now owned locally; convert to local term ids
+        lterms = jnp.where(recv_t >= 0, recv_t - sidx * V_loc, -1).reshape(-1)
+        ldocs = recv_d.reshape(-1)
+
+        new_state = append(state, lterms, ldocs)
+        drops = jnp.sum((valid[order] & ~keep).astype(jnp.int32))
+        new_state["route_drop"] = state["route_drop"] + drops
+        return new_state
+
+    specs = jax.tree.map(lambda _: jax.sharding.PartitionSpec(axis),
+                         init_state(cfg) | {"route_drop": 0})
+    step = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(specs, jax.sharding.PartitionSpec(axis),
+                  jax.sharding.PartitionSpec(axis)),
+        out_specs=specs, check_vma=False)
+    return step
+
+
+class ShardedIndex:
+    """Host-side driver for a distributed index build."""
+
+    def __init__(self, cfg: IndexConfig, mesh, axis: str = "shard",
+                 cap_per_dest: int | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.n = mesh.shape[axis]
+        state = init_sharded_state(cfg, self.n)
+        state["route_drop"] = jnp.zeros((self.n,), jnp.int32)
+        spec = jax.tree.map(
+            lambda _: jax.NamedSharding(mesh,
+                                        jax.sharding.PartitionSpec(axis)),
+            state)
+        self.state = jax.device_put(state, spec)
+        self._step = jax.jit(make_invert_step(cfg, mesh, axis, cap_per_dest),
+                             donate_argnums=0)
+
+    def append(self, terms, docs) -> None:
+        self.state = self._step(self.state,
+                                jnp.asarray(terms, jnp.int32),
+                                jnp.asarray(docs, jnp.int32))
+
+    def counters(self) -> Dict[str, int]:
+        out = {}
+        for key in ("total_postings", "overflow", "n_comp_total",
+                    "alloc_words", "route_drop"):
+            out[key] = int(np.asarray(self.state[key]).sum())
+        return out
+
+    def local_states(self):
+        """Split the global state back into per-shard local states (host)."""
+        n = self.n
+        outs = []
+        for s in range(n):
+            loc = {}
+            for k, v in self.state.items():
+                arr = np.asarray(v)
+                d = arr.shape[0] // n if arr.ndim else None
+                loc[k] = arr[s * d:(s + 1) * d] if arr.ndim else arr
+            outs.append(loc)
+        return outs

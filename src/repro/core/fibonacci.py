@@ -1,0 +1,23 @@
+"""Fibonacci utilities shared by the FBB growth schedule.
+
+The paper's FBB ("dynamic Fibonacci chunking", Hawking & Billerbeck 2017)
+organizes a postings list as runs of chunks: run *i* holds F_i chunks of size
+F_i (calibrated against the paper's reported stats — see DESIGN.md §1.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["fib_upto", "FIB_1M"]
+
+
+def fib_upto(limit: int) -> np.ndarray:
+    """Fibonacci numbers 1, 1, 2, 3, ... up to the first value >= limit."""
+    f = [1, 1]
+    while f[-1] < limit:
+        f.append(f[-1] + f[-2])
+    return np.asarray(f, dtype=np.int64)
+
+
+#: Enough Fibonacci numbers for any postings list up to ~10^12 items.
+FIB_1M = fib_upto(10**12)

@@ -1,0 +1,144 @@
+"""Pointer-free chunk-pool index state (the TPU realization of FBB / SQA).
+
+The paper's structures are pointer machines (malloc'd chunks + NEXT pointers,
+or segments + realloc'd dope vectors).  On TPU there is no malloc and no
+pointer chasing, so both structures are re-expressed over *flat pre-allocated
+pools* with index tables (structure-of-arrays):
+
+* ``buf``        — one flat int32 postings pool; a "chunk"/"segment" is a
+                   ``(base, size)`` region; ``base`` replaces the address.
+* FBB chain      — ``chunk_next/chunk_base/chunk_term/chunk_k`` tables replace
+                   NEXT pointers; ``head_chunk/tail_chunk`` replace the vocab
+                   HEAD/TAIL pointers.
+* SQA dope       — a flat ``dope_buf`` pool of segment bases; per-term
+                   ``dope_base`` + capacity index; regrowth copies entries to a
+                   fresh region and counts the discarded words, exactly like
+                   the paper's "simplest method of growing a dope vector".
+
+All shapes are static; growth is arithmetic (prefix sums over a batch), so the
+whole index is a pjit-shardable pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from .schedules import Schedule, get_schedule
+
+__all__ = ["IndexConfig", "init_state", "paper_memory_report", "COUNTERS"]
+
+COUNTERS = (
+    "buf_used",          # aligned words consumed from the postings pool
+    "alloc_words",       # word-granular allocated capacity (paper metric)
+    "n_comp_total",      # total components (chunks/segments) allocated
+    "dope_used",         # words consumed from the dope pool
+    "dope_discarded",    # dope words the *batched engine* actually discarded
+    "dope_discarded_paper",  # per-posting-equivalent discards (paper's A):
+                         # batching can skip capacity steps, so this >= actual
+    "dope_copy_words",   # dope entries physically copied (time cost proxy)
+    "copy_spill",        # copy elements that exceeded the per-step budget
+    "overflow",          # postings dropped because a pool filled up
+    "total_postings",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Static configuration of an inverted-index pool."""
+
+    method: str                      # 'fbb' | 'sqa' | 'sqa_linear' | ...
+    vocab: int
+    pool_words: int
+    max_chunks: int
+    dope_words: int = 0
+    align: int = 1                   # chunk base alignment in the TPU pool
+    max_len_per_term: int = 1 << 30  # sizing bound for schedule tables
+    copy_budget: int = 4096          # dope-copy window (words per pass)
+
+    @property
+    def schedule(self) -> Schedule:
+        return get_schedule(self.method, self.max_len_per_term)
+
+    @property
+    def has_dope(self) -> bool:
+        return self.schedule.has_dope
+
+    @property
+    def has_chain(self) -> bool:
+        return self.schedule.has_next_ptr
+
+
+def init_state(cfg: IndexConfig) -> Dict[str, Any]:
+    """Fresh, empty index state (a dict pytree of jnp arrays)."""
+    V = cfg.vocab
+    state = {
+        "buf": jnp.zeros((cfg.pool_words,), jnp.int32),
+        "length": jnp.zeros((V,), jnp.int32),
+        "n_comp": jnp.zeros((V,), jnp.int32),
+        "tail_base": jnp.full((V,), -1, jnp.int32),
+        # component table, shared by both methods: for FBB these ARE the
+        # chunks; for SQA they are benchmark scaffolding for bulk traversal
+        # (allocation-ordered segment bases) and are NOT counted in the
+        # paper-metric memory report.
+        "chunk_base": jnp.zeros((cfg.max_chunks,), jnp.int32),
+        "chunk_term": jnp.full((cfg.max_chunks,), -1, jnp.int32),
+        "chunk_k": jnp.zeros((cfg.max_chunks,), jnp.int32),
+    }
+    if cfg.has_chain:
+        state |= {
+            "head_chunk": jnp.full((V,), -1, jnp.int32),
+            "tail_chunk": jnp.full((V,), -1, jnp.int32),
+            "chunk_next": jnp.full((cfg.max_chunks,), -1, jnp.int32),
+        }
+    if cfg.has_dope:
+        state |= {
+            "dope_buf": jnp.zeros((cfg.dope_words,), jnp.int32),
+            "dope_base": jnp.full((V,), -1, jnp.int32),
+            "dope_cap_idx": jnp.full((V,), -1, jnp.int32),
+        }
+    for c in COUNTERS:
+        state[c] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def paper_memory_report(state: Dict[str, Any], cfg: IndexConfig) -> Dict[str, float]:
+    """Paper-metric memory accounting (words), computed from live state.
+
+    Mirrors §2 of the paper: items + waste + pointer words (+ discarded dope
+    for SQA variant A).  Everything is exact — counters are maintained by the
+    append step and the per-term tables give waste in the last component.
+    """
+    sched = cfg.schedule
+    total = int(state["total_postings"])
+    alloc = int(state["alloc_words"])
+    waste = alloc - total
+    report = dict(
+        method=cfg.method,
+        postings=total,
+        alloc_words=alloc,
+        waste_words=waste,
+        n_components=int(state["n_comp_total"]),
+        overflow=int(state["overflow"]),
+    )
+    if cfg.has_chain:
+        ptrs = int(state["n_comp_total"]) + 2 * cfg.vocab
+        report |= dict(pointer_words=ptrs, total_words=alloc + ptrs,
+                       total_cost=waste + ptrs)
+    else:
+        caps = np.asarray(sched.dope_caps)
+        idx = np.asarray(state["dope_cap_idx"])
+        live_dope = int(caps[np.maximum(idx, 0)][idx >= 0].sum()) + cfg.vocab
+        discarded = int(state["dope_discarded_paper"])
+        report |= dict(
+            pointer_words=live_dope,
+            discarded_dope_words=discarded,
+            discarded_dope_words_engine=int(state["dope_discarded"]),
+            total_words_b=alloc + live_dope,
+            total_words_a=alloc + live_dope + discarded,
+            total_cost_b=waste + live_dope,
+            total_cost_a=waste + live_dope + discarded,
+        )
+    return report

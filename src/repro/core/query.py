@@ -1,0 +1,76 @@
+"""Per-term postings access — where FBB and SQA genuinely differ.
+
+The paper's point: chunked lists (FBB) do not support random access — reaching
+component k requires walking k NEXT pointers.  SQ arrays locate any item in
+O(1) via the dope vector.  On TPU the same asymmetry appears as a *sequential*
+chain walk (a ``lax.scan`` with a loop-carried gather dependency) versus a
+fully *parallel* dope gather.  Both return the postings in list order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .inversion import _schedule_tables
+from .pool import IndexConfig
+
+__all__ = ["postings", "make_postings_fn"]
+
+State = Dict[str, Any]
+
+
+def make_postings_fn(cfg: IndexConfig, max_out: int):
+    """Returns ``f(state, term) -> (vals int32[max_out], count)``."""
+    sizes_t, cumcap_t, _, _ = _schedule_tables(cfg.schedule)
+    max_k = int(cfg.schedule.n_comp_for_len(max_out))
+
+    def comp_bases_chain(state: State, term) -> jnp.ndarray:
+        """FBB: walk the NEXT chain — sequential, k dependent gathers."""
+        def step(c, _):
+            nxt = jnp.where(c >= 0, state["chunk_next"][jnp.maximum(c, 0)], -1)
+            base = jnp.where(c >= 0, state["chunk_base"][jnp.maximum(c, 0)], -1)
+            return nxt, base
+        _, bases = jax.lax.scan(step, state["head_chunk"][term], None,
+                                length=max_k)
+        return bases                                  # [max_k]
+
+    def comp_bases_dope(state: State, term) -> jnp.ndarray:
+        """SQA: one parallel gather through the dope vector — O(1)/item."""
+        db = state["dope_base"][term]
+        ks = jnp.arange(max_k, dtype=jnp.int32)
+        ok = (db >= 0) & (ks < state["n_comp"][term])
+        ent = jnp.where(ok, db + ks, cfg.dope_words)
+        return jnp.where(ok, state["dope_buf"][jnp.minimum(
+            ent, cfg.dope_words - 1)], -1)
+
+    bases_fn = comp_bases_chain if cfg.has_chain else comp_bases_dope
+
+    def postings_fn(state: State, term) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        term = jnp.asarray(term, jnp.int32)
+        bases = bases_fn(state, term)                 # [max_k]
+        n = jnp.minimum(state["length"][term], max_out)
+        pos = jnp.arange(max_out, dtype=jnp.int32)
+        k = jnp.searchsorted(cumcap_t, pos, side="right").astype(jnp.int32)
+        k = jnp.minimum(k, max_k - 1)
+        lo = jnp.where(k > 0, cumcap_t[jnp.maximum(k - 1, 0)], 0)
+        base = bases[k]
+        ok = (pos < n) & (base >= 0)
+        addr = jnp.where(ok, base + pos - lo, 0)
+        vals = jnp.where(ok, state["buf"][jnp.minimum(
+            addr, cfg.pool_words - 1)], -1)
+        return vals, n
+
+    return postings_fn
+
+
+def postings(cfg: IndexConfig, state: State, term: int,
+             max_out: int = 1024) -> Tuple[np.ndarray, int]:
+    """Host convenience: fetch one term's postings as numpy."""
+    fn = jax.jit(make_postings_fn(cfg, max_out))
+    vals, n = fn(state, term)
+    n = int(n)
+    return np.asarray(vals)[:n], n

@@ -1,0 +1,156 @@
+"""Component-growth schedules for append-only lists (the paper's core objects).
+
+A *schedule* is a deterministic map from component index k (0-based) to the
+component's capacity in items.  Because the map is closed-form, every question
+the inversion engine asks — "which component holds item ``pos``?", "what is the
+capacity of component k?", "how many components does a list of length l have?"
+— becomes a table lookup / ``searchsorted``, which is what makes the structures
+expressible as pure JAX (no pointers, no dynamic allocation).
+
+Schedules provided:
+
+* ``fbb``        — run i (1-based) = F_i chunks of size F_i  (paper's FBB)
+* ``sqa``        — pow2 "SQ" arrays: run j = max(1, floor(3*2^(j-2))) segments
+                   of size 2^j; cumulative capacity after run j is 4^j - 1
+                   (1, 3, 15, 63, 255, …), so locate(i) is bit arithmetic —
+                   the "SQ"(uare) property enabling O(1) random access.
+* ``sqa_linear`` — segment k has size k+2 capped at ``cap`` (alternative that
+                   also matches the paper's discrete stats; see DESIGN.md §1.1)
+* ``doubling``   — classic doubling chunks (baseline)
+* ``fixed``      — fixed-size pages (vLLM-style KV paging baseline)
+
+The SQA dope vector grows geometrically; ``dope_caps`` tabulates successive
+dope capacities so regrowth/discard accounting is also closed-form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+
+import numpy as np
+
+from .fibonacci import FIB_1M
+
+__all__ = ["Schedule", "get_schedule", "SCHEDULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Precomputed growth-schedule tables.
+
+    Attributes:
+      name:     schedule identifier.
+      sizes:    int64[K] — capacity of component k.
+      cumcap:   int64[K] — cumulative capacity through component k
+                (``cumcap[k] = sizes[:k+1].sum()``).
+      has_next_ptr:   chunked-list flavour (FBB): one NEXT pointer per chunk,
+                HEAD+TAIL pointers in the vocabulary entry.
+      has_dope:  extensible-array flavour (SQA): per-term dope vector holding
+                one pointer per segment, one vocab pointer to the dope vector.
+      dope_caps: int64[M] — successive dope-vector capacities (entries), or
+                empty when has_dope is False.
+      dope_caps_cum: int64[M] — cumulative sum of ``dope_caps`` (for discard
+                accounting: growing from cap index a to b discards
+                ``dope_caps_cum[b-1] - dope_caps_cum[a-1]`` pointer words).
+    """
+
+    name: str
+    sizes: np.ndarray
+    cumcap: np.ndarray
+    has_next_ptr: bool
+    has_dope: bool
+    dope_caps: np.ndarray
+    dope_caps_cum: np.ndarray
+
+    # ---- python-side (oracle / analytics) helpers ----------------------
+    def n_comp_for_len(self, length) -> np.ndarray:
+        """Number of components a list of ``length`` items occupies."""
+        return _ncomp(self.cumcap, length)
+
+    def comp_of_pos(self, pos) -> np.ndarray:
+        """Component index holding item ``pos`` (0-based)."""
+        return np.searchsorted(self.cumcap, pos, side="right")
+
+    def alloc_for_len(self, length) -> np.ndarray:
+        """Total allocated item capacity for a list of ``length`` items."""
+        n = _ncomp(self.cumcap, length)
+        return np.where(n > 0, self.cumcap[np.maximum(n - 1, 0)], 0)
+
+    def dope_cap_idx_for(self, n_comp) -> np.ndarray:
+        """Index into dope_caps of the dope vector holding n_comp entries."""
+        return np.searchsorted(self.dope_caps, n_comp, side="left")
+
+    @property
+    def max_list_len(self) -> int:
+        return int(self.cumcap[-1])
+
+
+def _ncomp(cumcap: np.ndarray, length) -> np.ndarray:
+    length = np.asarray(length)
+    return np.where(length > 0,
+                    np.searchsorted(cumcap, length - 1, side="right") + 1,
+                    0).astype(np.int64)
+
+
+def _from_runs(name: str, run_sizes, run_lengths, total: int,
+               has_next_ptr: bool, has_dope: bool,
+               dope_growth: float = 2.0, dope_init: int = 2) -> Schedule:
+    sizes = []
+    cap = 0
+    for s, r in zip(run_sizes, run_lengths):
+        sizes.extend([int(s)] * int(r))
+        cap += int(s) * int(r)
+        if cap >= total:
+            break
+    sizes = np.asarray(sizes, dtype=np.int64)
+    cumcap = np.cumsum(sizes)
+    if has_dope:
+        caps = [int(dope_init)]
+        while caps[-1] < len(sizes):
+            caps.append(int(math.ceil(caps[-1] * dope_growth)))
+        dope_caps = np.asarray(caps, dtype=np.int64)
+    else:
+        dope_caps = np.zeros((0,), dtype=np.int64)
+    return Schedule(
+        name=name, sizes=sizes, cumcap=cumcap,
+        has_next_ptr=has_next_ptr, has_dope=has_dope,
+        dope_caps=dope_caps, dope_caps_cum=np.cumsum(dope_caps),
+    )
+
+
+@lru_cache(maxsize=None)
+def get_schedule(name: str, total: int = 1 << 30, *,
+                 dope_growth: float | None = None,
+                 page: int = 128, cap: int = 1024) -> Schedule:
+    """Build the named schedule with capacity for lists up to ``total`` items."""
+    if name == "fbb":
+        f = FIB_1M
+        return _from_runs("fbb", f, f, total, has_next_ptr=True, has_dope=False)
+    if name == "sqa":
+        js = range(64)
+        return _from_runs(
+            "sqa",
+            (2**j for j in js),
+            (max(1, (3 * 2**j) // 4) for j in js),
+            total, has_next_ptr=False, has_dope=True,
+            dope_growth=dope_growth or 2.0)
+    if name == "sqa_linear":
+        ks = range(total + 2)
+        return _from_runs(
+            "sqa_linear", (min(k + 2, cap) for k in ks), (1 for _ in ks),
+            total, has_next_ptr=False, has_dope=True,
+            dope_growth=dope_growth or 1.75)
+    if name == "doubling":
+        js = range(64)
+        return _from_runs("doubling", (2**j for j in js), (1 for _ in js),
+                          total, has_next_ptr=True, has_dope=False)
+    if name == "fixed":
+        n = total // page + 2
+        return _from_runs("fixed", (page for _ in range(n)),
+                          (1 for _ in range(n)), total,
+                          has_next_ptr=True, has_dope=False)
+    raise ValueError(f"unknown schedule {name!r}")
+
+
+SCHEDULES = ("fbb", "sqa", "sqa_linear", "doubling", "fixed")

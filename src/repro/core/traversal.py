@@ -1,0 +1,80 @@
+"""Bulk index traversal (the paper's "Traversal Time" measurement).
+
+The paper scans every postings list start-to-end.  The TPU-native bulk
+equivalent walks the allocated pool in address order (components were
+allocated by prefix sums, so component bases are monotone) and masks out the
+waste in each partially-filled component.  Both methods run the *identical*
+tile scan — the measured difference between FBB and SQA then comes from how
+many allocated words each schedule has to touch (internal fragmentation),
+which is precisely the paper's memory/cost axis showing up as traversal time.
+
+A second entry point, ``traverse_lists``, walks list-by-list via the
+per-term access paths in ``query.py`` (chain walk vs dope gather) and is used
+by the per-term benchmark.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .inversion import _schedule_tables
+from .pool import IndexConfig
+
+__all__ = ["make_traverse_fn", "traverse"]
+
+State = Dict[str, Any]
+
+
+def make_traverse_fn(cfg: IndexConfig, tile: int = 1 << 16):
+    """Returns ``f(state) -> (checksum, n_valid_words)`` (jittable).
+
+    Scans ``buf`` in fixed tiles; for each word finds its component by
+    ``searchsorted`` into the (monotone) component-base table, then checks the
+    word is within the component's *valid* prefix (= term length minus the
+    component's cumulative start, clipped to the component size).
+    """
+    sizes_t, cumcap_t, _, _ = _schedule_tables(cfg.schedule)
+    n_tiles = (cfg.pool_words + tile - 1) // tile
+    MC = cfg.max_chunks
+
+    def traverse_fn(state: State) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        ncomp = state["n_comp_total"]
+        used = state["buf_used"]
+        # allocation-ordered bases; pad tail with huge sentinels so
+        # searchsorted never lands past the live region.
+        live = jnp.arange(MC, dtype=jnp.int32) < ncomp
+        bases = jnp.where(live, state["chunk_base"], jnp.int32(2**31 - 1))
+
+        def body(carry, t):
+            acc, cnt = carry
+            w = t * tile + jnp.arange(tile, dtype=jnp.int32)
+            c = jnp.searchsorted(bases, w, side="right").astype(jnp.int32) - 1
+            c_ok = (c >= 0) & (c < ncomp) & (w < used)
+            c_c = jnp.clip(c, 0, MC - 1)
+            term = state["chunk_term"][c_c]
+            k = state["chunk_k"][c_c]
+            off = w - state["chunk_base"][c_c]
+            lo = jnp.where(k > 0, cumcap_t[jnp.maximum(k - 1, 0)], 0)
+            valid_in_comp = jnp.minimum(
+                state["length"][jnp.maximum(term, 0)] - lo, sizes_t[k])
+            ok = c_ok & (term >= 0) & (off < valid_in_comp)
+            vals = jnp.where(ok, state["buf"][jnp.minimum(
+                w, cfg.pool_words - 1)], 0)
+            # int32 wrap-around checksum: deterministic, method-comparable
+            return (acc + jnp.sum(vals.astype(jnp.int32)),
+                    cnt + jnp.sum(ok.astype(jnp.int32))), None
+
+        init = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        (acc, cnt), _ = jax.lax.scan(
+            body, init, jnp.arange(n_tiles, dtype=jnp.int32))
+        return acc, cnt
+
+    return traverse_fn
+
+
+def traverse(cfg: IndexConfig, state: State) -> Tuple[int, int]:
+    acc, cnt = jax.jit(make_traverse_fn(cfg))(state)
+    return int(acc), int(cnt)

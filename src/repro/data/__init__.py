@@ -1,0 +1,8 @@
+from .synthacorpus import SynthConfig, generate_corpus, corpus_stats
+from .tokenizer import HashTokenizer
+from .pipeline import BatchSpec, token_batches, lm_batches, Prefetcher
+
+__all__ = [
+    "SynthConfig", "generate_corpus", "corpus_stats", "HashTokenizer",
+    "BatchSpec", "token_batches", "lm_batches", "Prefetcher",
+]

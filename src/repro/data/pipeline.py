@@ -1,0 +1,117 @@
+"""Deterministic sharded batch pipeline with bounded prefetch.
+
+Straggler mitigation & fault tolerance at the input layer:
+
+* every batch is a pure function of ``(seed, step)`` — a restarted worker
+  regenerates exactly the batches it owes, so checkpoint resume is bit-exact
+  (see ``tests/test_train_loop.py``);
+* ``Prefetcher`` overlaps host synthesis with device steps through a bounded
+  queue (bounded => a slow host cannot run unboundedly ahead, a slow device
+  never blocks synthesis until the queue fills);
+* each data-parallel worker draws a disjoint fold of the stream via
+  ``fold_in(seed, step * n_workers + worker)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["BatchSpec", "token_batches", "lm_batches", "Prefetcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    batch: int                 # records / sequences per step (global)
+    seq_len: int = 0           # tokens per sequence (LM shapes)
+    vocab: int = 32768
+    seed: int = 0
+    n_workers: int = 1
+    worker: int = 0
+
+
+def _rng_for(spec: BatchSpec, step: int) -> np.random.Generator:
+    mix = (spec.seed * 0x9E3779B97F4A7C15
+           + step * spec.n_workers + spec.worker + 1) % (1 << 64)
+    return np.random.default_rng(mix)
+
+
+def token_batches(spec: BatchSpec, zipf_alpha: float = 1.07
+                  ) -> Callable[[int], tuple]:
+    """(terms, docs) inversion batches as a pure function of step."""
+    ranks = np.arange(1, spec.vocab + 1, dtype=np.float64)
+    cdf = np.cumsum(ranks ** (-zipf_alpha))
+    cdf /= cdf[-1]
+
+    def at_step(step: int):
+        rng = _rng_for(spec, step)
+        n = spec.batch
+        terms = np.searchsorted(cdf, rng.random(n)).astype(np.int32)
+        docs = (step * n + np.arange(n, dtype=np.int32))
+        return terms, docs
+
+    return at_step
+
+
+def lm_batches(spec: BatchSpec) -> Callable[[int], dict]:
+    """Synthetic LM token batches (tokens + shifted labels + mask)."""
+    def at_step(step: int):
+        rng = _rng_for(spec, step)
+        b = spec.batch // spec.n_workers
+        toks = rng.integers(0, spec.vocab, size=(b, spec.seq_len),
+                            dtype=np.int32)
+        return dict(tokens=toks,
+                    labels=np.roll(toks, -1, axis=1),
+                    mask=np.ones((b, spec.seq_len), np.float32))
+
+    return at_step
+
+
+class Prefetcher:
+    """Bounded background prefetch of ``fn(step)`` for step = start, ...."""
+
+    _STOP = object()
+
+    def __init__(self, fn: Callable[[int], object], start: int = 0,
+                 depth: int = 2, stop_at: Optional[int] = None):
+        self.fn = fn
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.stop_at = stop_at
+        self._halt = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(start,), daemon=True)
+        self._thread.start()
+
+    def _run(self, start: int) -> None:
+        step = start
+        while not self._halt.is_set():
+            if self.stop_at is not None and step >= self.stop_at:
+                self.q.put(self._STOP)
+                return
+            try:
+                item = (step, self.fn(step))
+            except Exception as e:           # surface errors to consumer
+                self.q.put(e)
+                return
+            self.q.put(item)
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self.q.get()
+            if item is self._STOP:
+                return
+            if isinstance(item, Exception):
+                raise item
+            yield item
+
+    def close(self) -> None:
+        self._halt.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

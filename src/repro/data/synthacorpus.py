@@ -1,0 +1,96 @@
+"""SynthaCorpus-style synthetic corpora of short records.
+
+The paper generates Synth10B with Hawking's SynthaCorpus: Zipf-distributed
+vocabulary over large numbers of short records (web titles, song lines).  We
+reproduce the *shape* at configurable scale: term ids drawn from a Zipf-Alpha
+distribution, record lengths from a truncated geometric — both cheap enough
+to synthesize billions of postings streamingly, deterministic per seed.
+
+Scales used by the benchmarks (see EXPERIMENTS.md §Table1):
+  * ``WIKT-like``  — 11 M records, V = 2.27 M, ~33 M postings (1:1 scale)
+  * ``Synth-S``    — Synth10B at 1/1000 scale (10 M postings)
+  * ``clueT-like`` — clueTitles shape at 1/100 scale
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+__all__ = ["SynthConfig", "generate_corpus", "corpus_stats", "PRESETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthConfig:
+    vocab: int = 1 << 20          # distinct terms
+    n_postings: int = 10_000_000  # total term occurrences
+    zipf_alpha: float = 1.07      # SynthaCorpus-style head skew
+    mean_rec_len: float = 7.3     # short records (titles)
+    seed: int = 0
+    batch: int = 1 << 16          # postings per emitted batch
+
+    @property
+    def n_records(self) -> int:
+        return max(1, int(self.n_postings / self.mean_rec_len))
+
+
+PRESETS = {
+    "wikt": SynthConfig(vocab=2_270_000, n_postings=32_800_000,
+                        mean_rec_len=2.95, seed=11),
+    "wikt_small": SynthConfig(vocab=227_000, n_postings=3_280_000,
+                              mean_rec_len=2.95, seed=11),
+    "synth_s": SynthConfig(vocab=1_000_000, n_postings=10_000_000,
+                           mean_rec_len=7.3, seed=10),
+    "cluet_small": SynthConfig(vocab=1_660_000, n_postings=19_710_000,
+                               mean_rec_len=7.25, seed=12),
+    "tiny": SynthConfig(vocab=4096, n_postings=200_000, mean_rec_len=5.0,
+                        seed=1, batch=1 << 14),
+}
+
+
+def _zipf_sampler(cfg: SynthConfig):
+    """Inverse-CDF Zipf sampler over a finite vocab (vectorized, exact)."""
+    ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+    w = ranks ** (-cfg.zipf_alpha)
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+
+    def sample(rng: np.random.Generator, n: int) -> np.ndarray:
+        u = rng.random(n)
+        return np.searchsorted(cdf, u, side="left").astype(np.int32)
+
+    return sample
+
+
+def generate_corpus(cfg: SynthConfig) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(terms, docs)`` batches; docs are record ids (sorted asc)."""
+    rng = np.random.default_rng(cfg.seed)
+    sample = _zipf_sampler(cfg)
+    emitted = 0
+    doc = 0
+    p = 1.0 / cfg.mean_rec_len
+    while emitted < cfg.n_postings:
+        n = min(cfg.batch, cfg.n_postings - emitted)
+        terms = sample(rng, n)
+        # record boundaries: geometric record lengths -> doc id per posting
+        breaks = rng.random(n) < p
+        docs = doc + np.cumsum(breaks).astype(np.int32)
+        doc = int(docs[-1]) + 0
+        emitted += n
+        yield terms, docs
+
+
+def corpus_stats(cfg: SynthConfig, max_batches: int | None = None) -> dict:
+    """Host-side pass computing V_used / postings / records (for Table 1)."""
+    seen = np.zeros(cfg.vocab, dtype=bool)
+    total = 0
+    last_doc = 0
+    for i, (terms, docs) in enumerate(generate_corpus(cfg)):
+        seen[terms] = True
+        total += len(terms)
+        last_doc = int(docs[-1])
+        if max_batches and i + 1 >= max_batches:
+            break
+    return dict(postings=total, vocab_used=int(seen.sum()),
+                records=last_doc + 1)

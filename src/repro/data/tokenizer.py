@@ -1,0 +1,53 @@
+"""Hashing tokenizer: text records -> term ids without a learned vocab.
+
+QBASHER builds its vocabulary hash table during indexing; for the JAX
+pipeline we use a stateless multiplicative hash (splitmix-style) into a
+fixed id space, so tokenization is pure, vectorizable, and identical across
+workers — a requirement for the deterministic restart guarantees in
+``runtime/``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["HashTokenizer"]
+
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) % (1 << 64)
+    x = ((x ^ (x >> 30)) * int(_M1)) % (1 << 64)
+    x = ((x ^ (x >> 27)) * int(_M2)) % (1 << 64)
+    return x ^ (x >> 31)
+
+
+class HashTokenizer:
+    """Whitespace split + 64-bit string hash -> ``[0, vocab)`` ids."""
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+
+    def _hash_token(self, tok: str) -> int:
+        h = 1469598103934665603                    # FNV-1a seed
+        for b in tok.lower().encode("utf-8"):
+            h = ((h ^ b) * 1099511628211) % (1 << 64)
+        return _splitmix64(h) % self.vocab
+
+    def encode(self, text: str) -> List[int]:
+        return [self._hash_token(t) for t in text.split() if t]
+
+    def invert_records(self, records: Sequence[str], doc0: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Records -> flat (terms, docs) posting arrays."""
+        terms: List[int] = []
+        docs: List[int] = []
+        for i, rec in enumerate(records):
+            ids = self.encode(rec)
+            terms.extend(ids)
+            docs.extend([doc0 + i] * len(ids))
+        return (np.asarray(terms, np.int32).reshape(-1),
+                np.asarray(docs, np.int32).reshape(-1))

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots (TPU is the TARGET; on this
+# CPU container they are validated with interpret=True against ref.py
+# oracles, and the pure-JAX reference paths are what the dry-run lowers).
+#
+# histogram       — MXU one-hot term-frequency counting (capacity planning)
+# chunk_gather    — block-table postings gather (the paper's traversal)
+# segment_bag     — embedding-bag gather+reduce (recsys family)
+# paged_decode    — flash-decode over FBB/SQA-paged KV (serving)
+# flash_attention — blocked causal GQA attention (prefill/training)
+from . import histogram, chunk_gather, segment_bag, paged_decode, flash_attention  # noqa: F401

@@ -1,0 +1,4 @@
+from .ops import gather_tiles
+from .ref import gather_tiles_ref
+
+__all__ = ["gather_tiles", "gather_tiles_ref"]

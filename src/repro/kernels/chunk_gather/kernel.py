@@ -1,0 +1,41 @@
+"""Block-table postings gather — the paper's traversal on TPU.
+
+The chunk/segment tables produced by the inversion engine are exactly a
+block table (vLLM-style): chunk bases are 128-word aligned, so a postings
+list is a sequence of 128-word pool tiles.  The kernel's BlockSpec
+``index_map`` reads the tile table (scalar-prefetched into SMEM) and DMAs
+the selected HBM tile into VMEM — indirection happens at the grid level, not
+with per-element gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_tiles_kernel", "gather_tiles_pallas", "TILE"]
+
+TILE = 128
+
+
+def gather_tiles_kernel(tiles_ref, pool_ref, o_ref):
+    del tiles_ref  # consumed by the index_map
+    o_ref[...] = pool_ref[...]
+
+
+def gather_tiles_pallas(pool: jnp.ndarray, tiles: jnp.ndarray, *,
+                        interpret: bool = False) -> jnp.ndarray:
+    """pool int32[P, TILE], tiles int32[T] (pre-clamped) -> int32[T, TILE]."""
+    t = tiles.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i, tiles: (tiles[i], 0))],
+        out_specs=pl.BlockSpec((1, TILE), lambda i, tiles: (i, 0)),
+    )
+    return pl.pallas_call(
+        gather_tiles_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, TILE), pool.dtype),
+        interpret=interpret,
+    )(tiles, pool)

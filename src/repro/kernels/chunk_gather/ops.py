@@ -1,0 +1,28 @@
+"""Jit'd dispatch wrapper for the block-table postings gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gather_tiles_pallas, TILE
+from .ref import gather_tiles_ref
+
+__all__ = ["gather_tiles", "TILE"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_tiles(pool: jnp.ndarray, tiles: jnp.ndarray, *,
+                 use_pallas: bool = False, interpret: bool = False
+                 ) -> jnp.ndarray:
+    """Gather 128-word pool tiles by tile id (negative ids -> tile 0).
+
+    pool: int32[P*TILE] flat postings pool (128-aligned chunk bases).
+    tiles: int32[T] tile indices (chunk_base // TILE expansions).
+    """
+    pool2 = pool.reshape(-1, TILE)
+    tiles = jnp.clip(tiles, 0, pool2.shape[0] - 1)
+    if use_pallas:
+        return gather_tiles_pallas(pool2, tiles, interpret=interpret)
+    return gather_tiles_ref(pool2, tiles)

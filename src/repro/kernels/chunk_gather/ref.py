@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the block-table gather."""
+import jax.numpy as jnp
+
+__all__ = ["gather_tiles_ref"]
+
+
+def gather_tiles_ref(pool: jnp.ndarray, tiles: jnp.ndarray) -> jnp.ndarray:
+    return pool[jnp.clip(tiles, 0, pool.shape[0] - 1)]

@@ -1,0 +1,96 @@
+"""Blocked causal GQA attention (FlashAttention re-thought for the MXU).
+
+Grid (batch, q-head, q-block i, k-block j) with j innermost; online-softmax
+running stats (m, l, acc) live in VMEM scratch and persist across the
+sequential j steps.  Block shapes are MXU-aligned (bq × d and bk × d matmuls
+with d = head_dim a multiple of 128 preferred).  GQA is expressed purely in
+the k/v index_map (q head h reads kv head h // group) — no KV replication is
+materialized.  Fully-masked upper-triangle blocks skip their FLOPs with
+``pl.when`` (the DMA still runs; on TPU the grid is static).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                           *, bq: int, bk: int, scale: float, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: block (i, j) is live iff some k-pos <= some q-pos
+    live = (not causal) or (j * bk <= i * bq + bq - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)                # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q f[B,H,S,D]; k,v f[B,KVH,S,D]; KVH divides H.  Returns [B,H,S,D]."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    scale = 1.0 / (D ** 0.5)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+
+    grid = (B, H, S // bq, S // bk)
+    return pl.pallas_call(
+        functools.partial(flash_attention_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,26 @@
+"""Jit'd dispatch wrapper for blocked causal GQA attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref, chunked_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "bq", "bk",
+                                             "chunk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "chunked",
+                    bq: int = 128, bk: int = 128, chunk: int = 1024,
+                    interpret: bool = False):
+    """impl: 'pallas' (TPU kernel), 'chunked' (scan flash), 'dense' (oracle)."""
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                      interpret=interpret)
+    if impl == "chunked":
+        return chunked_attention_ref(q, k, v, causal=causal,
+                                     chunk=min(chunk, q.shape[2]))
+    return attention_ref(q, k, v, causal=causal)

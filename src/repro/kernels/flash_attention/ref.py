@@ -1,0 +1,82 @@
+"""Oracles: dense softmax attention, and the lax.scan online-softmax chunked
+variant that the multi-pod dry-run lowers (memory-safe at 32k prefill)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "chunked_attention_ref"]
+
+
+def _expand_kv(x, group):
+    # [B,KVH,S,D] -> [B,H,S,D] without materializing when group == 1
+    if group == 1:
+        return x
+    return jnp.repeat(x, group, axis=1)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    B, H, S, D = q.shape
+    group = H // k.shape[1]
+    k = _expand_kv(k, group)
+    v = _expand_kv(v, group)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunked_attention_ref(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                          constrain=None):
+    """Online-softmax over KV chunks via lax.scan — O(S·chunk) memory.
+
+    This is the pure-JAX flash path used inside the transformer for long
+    prefill shapes; the Pallas kernel is the TPU-native equivalent.
+
+    ``constrain``: optional fn applied to the f32 running stats each step —
+    GSPMD sharding propagation is weak through while-loop carries, so the
+    caller re-asserts the head sharding there (without it the [B,H,S,D] f32
+    accumulator silently replicates and every layer pays full-size
+    all-gathers of it in the backward pass).
+    """
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    nc = S // chunk
+    assert S % chunk == 0
+    qf = q.astype(jnp.float32) / (D ** 0.5)
+    kc = k.astype(jnp.float32).reshape(B, KVH, nc, chunk, D)
+    vc = v.astype(jnp.float32).reshape(B, KVH, nc, chunk, D)
+    qpos = jnp.arange(S, dtype=jnp.int32)
+    cst = constrain or (lambda t: t)
+
+    def body(carry, xc):
+        m, l, acc, j = carry
+        kj, vj = xc                                   # [B,KVH,chunk,D]
+        kj = _expand_kv(kj, group)
+        vj = _expand_kv(vj, group)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj)
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            s = jnp.where(kpos[None, None, None, :] <= qpos[None, None, :,
+                                                            None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = cst(l * alpha + p.sum(-1, keepdims=True))
+        acc = cst(acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vj))
+        return (cst(m_new), l, acc, j + 1), None
+
+    m0 = jnp.full((B, H, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, H, S, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (cst(m0), cst(l0), cst(a0), jnp.zeros((), jnp.int32)),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0)))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Term-frequency histogram as an MXU-friendly one-hot reduction.
+
+Grid (item-tile i, vocab-tile j).  Each step materializes the one-hot
+comparison block [BN, BV] in VMEM and reduces over items; vocab-tile outputs
+are revisited across item-tiles (TPU grid is sequential), accumulating in
+place.  BN/BV default to MXU/VPU-aligned 512/512.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["histogram_kernel", "histogram_pallas"]
+
+
+def histogram_kernel(ids_ref, o_ref, *, bn: int, bv: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1) + j * bv
+    onehot = (ids_ref[...].reshape(bn, 1) == col).astype(jnp.int32)
+    o_ref[...] += onehot.sum(axis=0).reshape(1, bv)
+
+
+def histogram_pallas(ids: jnp.ndarray, vocab: int, *, bn: int = 512,
+                     bv: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """ids int32[N] (N % bn == 0, pad with -1) -> counts int32[vocab]."""
+    n = ids.shape[0]
+    assert n % bn == 0 and vocab % bv == 0, (n, bn, vocab, bv)
+    import functools
+    out = pl.pallas_call(
+        functools.partial(histogram_kernel, bn=bn, bv=bv),
+        grid=(n // bn, vocab // bv),
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, bv), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, vocab), jnp.int32),
+        interpret=interpret,
+    )(ids.reshape(n // bn, bn))
+    return out[0]

@@ -1,0 +1,29 @@
+"""Jit'd dispatch wrapper for the histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import histogram_pallas
+from .ref import histogram_ref
+
+__all__ = ["histogram"]
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "use_pallas",
+                                             "interpret", "bn", "bv"))
+def histogram(ids: jnp.ndarray, vocab: int, *, use_pallas: bool = False,
+              interpret: bool = False, bn: int = 512, bv: int = 512
+              ) -> jnp.ndarray:
+    """Count occurrences of each id in ``[0, vocab)``; ids < 0 are ignored."""
+    if not use_pallas:
+        return histogram_ref(ids, vocab)
+    n = ids.shape[0]
+    pad_n = (-n) % bn
+    pad_v = (-vocab) % bv
+    ids_p = jnp.pad(ids, (0, pad_n), constant_values=-1)
+    out = histogram_pallas(ids_p, vocab + pad_v, bn=bn, bv=bv,
+                           interpret=interpret)
+    return out[:vocab]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+__all__ = ["histogram_ref"]
+
+
+def histogram_ref(ids: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    ids = ids.astype(jnp.int32)
+    ok = (ids >= 0) & (ids < vocab)
+    idx = jnp.where(ok, ids, vocab)
+    return jnp.zeros((vocab + 1,), jnp.int32).at[idx].add(1)[:vocab]

@@ -1,0 +1,4 @@
+from .ops import paged_decode
+from .ref import paged_decode_ref
+
+__all__ = ["paged_decode", "paged_decode_ref"]

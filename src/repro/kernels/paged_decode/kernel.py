@@ -1,0 +1,106 @@
+"""Flash-decode over a paged KV cache — the paper's structures serving LMs.
+
+The KV pool is paged exactly like the postings pool: a growth policy (fixed /
+FBB / SQA) hands each sequence runs of pages, and the page table is the dope
+vector / chunk chain flattened.  This kernel is the traversal: one query
+token attends across its pages with an online softmax, the page indirection
+handled in the BlockSpec ``index_map`` from the scalar-prefetched table
+(identical mechanics to ``chunk_gather``, plus MXU compute per page).
+
+Grid (batch b, kv-head kv, page p), p innermost; scratch keeps the running
+(m, l, acc) for the G = H/KVH query heads in the group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_kernel", "paged_decode_pallas"]
+
+NEG_INF = -1e30
+
+
+def paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = len_ref[b]
+    live = p * page < seq_len
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)         # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)         # [page, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)                     # [G, page]
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(q, k_pool, v_pool, page_table, lengths, *,
+                        interpret: bool = False):
+    """One-token flash-decode through a page table.
+
+    q:          f[B, H, D]        (current-step queries)
+    k_pool:     f[NP, page, KVH, D]  (paged KV pools)
+    page_table: int32[B, P]       (pre-clamped page ids per sequence)
+    lengths:    int32[B]          (current KV length per sequence)
+    """
+    B, H, D = q.shape
+    NP, page, KVH, _ = k_pool.shape
+    G = H // KVH
+    P = page_table.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, P),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, kv, p, pt, ln: (b, kv, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, kv, p, pt, ln: (pt[b, p], 0, kv, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, kv, p, pt, ln: (pt[b, p], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, kv, p, pt, ln: (b, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    # grid blocks address q as [B, H, D] with head-block size G at index kv
+    return pl.pallas_call(
+        functools.partial(paged_decode_kernel, page=page, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pool, v_pool)

@@ -1,0 +1,23 @@
+"""Jit'd dispatch wrapper for paged flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_decode_pallas
+from .ref import paged_decode_ref
+
+__all__ = ["paged_decode"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode(q, k_pool, v_pool, page_table, lengths, *,
+                 use_pallas: bool = False, interpret: bool = False):
+    """Decode-step attention through a (FBB/SQA/fixed) page table."""
+    page_table = jnp.clip(page_table, 0, k_pool.shape[0] - 1)
+    if use_pallas:
+        return paged_decode_pallas(q, k_pool, v_pool, page_table, lengths,
+                                   interpret=interpret)
+    return paged_decode_ref(q, k_pool, v_pool, page_table, lengths)

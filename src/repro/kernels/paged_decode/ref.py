@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: gather pages densely, then masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["paged_decode_ref"]
+
+
+def paged_decode_ref(q, k_pool, v_pool, page_table, lengths):
+    B, H, D = q.shape
+    NP, page, KVH, _ = k_pool.shape
+    G = H // KVH
+    P = page_table.shape[1]
+    pt = jnp.clip(page_table, 0, NP - 1)
+    k = k_pool[pt].reshape(B, P * page, KVH, D)       # [B, S, KVH, D]
+    v = v_pool[pt].reshape(B, P * page, KVH, D)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf,
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    pos = jnp.arange(P * page, dtype=jnp.int32)
+    s = jnp.where(pos[None, None, None, :] < lengths[:, None, None, None],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

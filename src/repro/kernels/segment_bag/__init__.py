@@ -1,0 +1,4 @@
+from .ops import segment_bag
+from .ref import segment_bag_ref
+
+__all__ = ["segment_bag", "segment_bag_ref"]

@@ -1,0 +1,50 @@
+"""Embedding-bag (multi-hot gather + reduce) for the recsys family.
+
+JAX has no native ``nn.EmbeddingBag``; this kernel IS the system's bag op.
+Grid (bag b, slot l): the index_map reads the scalar-prefetched id table and
+DMAs exactly one embedding row per step from HBM into VMEM — rows for padded
+slots (id < 0) are redirected to row 0 and masked in-kernel.  The out block
+for bag ``b`` is revisited across ``l`` and accumulates in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segment_bag_kernel", "segment_bag_pallas"]
+
+
+def segment_bag_kernel(ids_ref, table_ref, o_ref, *, L: int):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    valid = ids_ref[b, l] >= 0
+    o_ref[...] += jnp.where(valid, table_ref[...], 0.0)
+
+
+def segment_bag_pallas(table: jnp.ndarray, ids: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """table f32[V, D], ids int32[B, L] (-1 pad) -> f32[B, D] (sum bag)."""
+    B, L = ids.shape
+    _, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L),
+        in_specs=[pl.BlockSpec(
+            (1, D), lambda b, l, ids: (jnp.maximum(ids[b, l], 0), 0))],
+        out_specs=pl.BlockSpec((1, D), lambda b, l, ids: (b, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(segment_bag_kernel, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(ids, table)

@@ -1,0 +1,27 @@
+"""Jit'd dispatch wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_bag_pallas
+from .ref import segment_bag_ref
+
+__all__ = ["segment_bag"]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "use_pallas",
+                                             "interpret"))
+def segment_bag(table: jnp.ndarray, ids: jnp.ndarray, *, mode: str = "sum",
+                use_pallas: bool = False, interpret: bool = False
+                ) -> jnp.ndarray:
+    """EmbeddingBag: sum/mean of table rows per bag; ids < 0 are padding."""
+    if use_pallas:
+        out = segment_bag_pallas(table, ids, interpret=interpret)
+        if mode == "mean":
+            n = jnp.maximum((ids >= 0).sum(axis=-1, keepdims=True), 1)
+            out = out / n
+        return out
+    return segment_bag_ref(table, ids, mode=mode)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: embedding-bag via take + masked sum (the system's
+reference EmbeddingBag used by the recsys models)."""
+import jax.numpy as jnp
+
+__all__ = ["segment_bag_ref"]
+
+
+def segment_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                    mode: str = "sum") -> jnp.ndarray:
+    ok = ids >= 0
+    rows = table[jnp.maximum(ids, 0)]                 # [B, L, D]
+    rows = jnp.where(ok[..., None], rows, 0.0)
+    out = rows.sum(axis=-2)
+    if mode == "mean":
+        n = jnp.maximum(ok.sum(axis=-1, keepdims=True), 1)
+        out = out / n
+    return out

@@ -1,0 +1,308 @@
+"""Per-cell step builders + abstract input specs for the dry-run.
+
+For every (arch × shape) cell this module provides:
+  * ``input_specs``      — ShapeDtypeStruct stand-ins (no allocation);
+  * ``abstract state``   — params / optimizer / KV-cache shapes via
+                           ``jax.eval_shape`` (nothing materializes);
+  * ``step + shardings`` — the jit-able step function and its in_shardings.
+
+LM stacks support ``n_layers_override`` so the roofline pass can compile
+unrolled 2- and 4-layer variants and extrapolate exactly (homogeneous
+stack), while the memory-fit pass compiles the full scan+remat depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import LMConfig, GNNConfig, RecsysConfig
+from ..configs.shapes import ShapeSpec
+from ..models import transformer as T
+from ..models import nequip as NQ
+from ..models import recsys as RS
+from ..models.gnn_common import GraphBatch
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..sharding.rules import lm_param_specs, decode_state_specs
+
+__all__ = ["build_cell", "Cell"]
+
+ADAMW = AdamWConfig()
+
+
+@dataclasses.dataclass
+class Cell:
+    step: Any                 # jit-able fn
+    args: Tuple               # ShapeDtypeStruct pytrees
+    in_specs: Tuple           # matching PartitionSpec pytrees
+    kind: str
+    meta: Dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    names = mesh.axis_names
+    return (("pod", "data") if "pod" in names else ("data",)), "model"
+
+
+# ----------------------------------------------------------------- LM cells
+
+def _lm_abstract(cfg, dist):
+    params = jax.eval_shape(functools.partial(T.init_lm, cfg),
+                            jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: adamw_init(p, ADAMW), params)
+    return params, opt
+
+
+def _opt_specs(param_specs):
+    return dict(m=param_specs, v=param_specs, step=P())
+
+
+def build_lm_cell(cfg: LMConfig, shape: ShapeSpec, mesh, *,
+                  n_layers_override: Optional[int] = None,
+                  scan_layers: bool = True) -> Cell:
+    batch_axes, model_axis = _axes(mesh)
+    if n_layers_override:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    dist = T.Dist(mesh=mesh, batch_axes=batch_axes, model_axis=model_axis,
+                  scan_layers=scan_layers, remat=scan_layers)
+    pspecs = lm_param_specs(cfg, batch_axes, model_axis, fsdp=True)
+    params, opt = _lm_abstract(cfg, dist)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        batch = dict(tokens=_sds((B, S), jnp.int32),
+                     labels=_sds((B, S), jnp.int32),
+                     mask=_sds((B, S), jnp.float32))
+        bspecs = dict(tokens=P(batch_axes, None), labels=P(batch_axes, None),
+                      mask=P(batch_axes, None))
+
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(
+                lambda pp: T.lm_loss(cfg, dist, pp, b))(p)
+            # grads: cast to param dtype (bf16 reduction — documented), then
+            # constrain to the FSDP/TP layout of their params so the DP sum
+            # lowers to reduce-scatter (not all-reduce + slice) and the
+            # global-norm in adamw is computed on the shards.
+            named = jax.tree.map(
+                lambda sp: jax.sharding.NamedSharding(mesh, sp), pspecs,
+                is_leaf=lambda x: isinstance(x, P))
+            g = jax.tree.map(lambda gr, pp: gr.astype(pp.dtype), g, p)
+            g = jax.tree.map(jax.lax.with_sharding_constraint, g, named)
+            p2, o2 = adamw_update(p, g, o, ADAMW)
+            return p2, o2, loss
+
+        return Cell(step, (params, opt, batch),
+                    (pspecs, _opt_specs(pspecs), bspecs), "train",
+                    dict(tokens=B * S))
+
+    if shape.kind == "prefill":
+        batch = _sds((B, S), jnp.int32)
+
+        def step(p, toks):
+            return T.lm_logits(cfg, dist, p, toks)
+
+        return Cell(step, (params, batch), (pspecs, P(batch_axes, None)),
+                    "prefill", dict(tokens=B * S))
+
+    # decode: one new token against an S-long KV cache
+    seq_axes = (batch_axes + (model_axis,)) if B == 1 else ()
+    state = jax.eval_shape(
+        functools.partial(T.init_decode_state, cfg, B, S), )
+    sspecs = decode_state_specs(B, batch_axes, model_axis, seq_axes)
+    # stacked cache has layer dim first -> specs already [L,B,S,KV,dh]
+    toks = _sds((B,), jnp.int32)
+
+    def step(p, st, tk):
+        return T.decode_step(cfg, dist, p, st, tk)
+
+    return Cell(step, (params, state, toks),
+                (pspecs, sspecs, P(batch_axes) if B > 1 else P()),
+                "decode", dict(tokens=B, kv_len=S))
+
+
+# ---------------------------------------------------------------- GNN cells
+
+def _graph_specs(n, e, f, n_graphs, edge_axes):
+    sds = dict(
+        pos=_sds((n, 3), jnp.float32), feat=_sds((n, f), jnp.float32),
+        species=_sds((n,), jnp.int32),
+        edge_src=_sds((e,), jnp.int32), edge_dst=_sds((e,), jnp.int32),
+        node_mask=_sds((n,), bool), edge_mask=_sds((e,), bool),
+        graph_id=_sds((n,), jnp.int32))
+    sp = dict(
+        pos=P(None, None), feat=P(None, None), species=P(None),
+        edge_src=P(edge_axes), edge_dst=P(edge_axes),
+        node_mask=P(None), edge_mask=P(edge_axes), graph_id=P(None))
+    return sds, sp, n_graphs
+
+
+def build_gnn_cell(cfg: GNNConfig, shape: ShapeSpec, mesh) -> Cell:
+    batch_axes, model_axis = _axes(mesh)
+    edge_axes = batch_axes + (model_axis,)
+    pad = lambda x, m: ((x + m - 1) // m) * m
+    if shape.name == "molecule":
+        n, e, ng = 3968, 8192, shape.n_graphs
+        f = 0
+        forces = True
+    elif shape.name == "minibatch_lg":
+        # sampled subgraph: 1024 seeds, fanout 15 then 10 (padded)
+        n, e, ng, f, forces = 262144, 262144, 1, 0, False
+    else:
+        n = pad(shape.n_nodes, 512)
+        e = pad(shape.n_edges, 512)
+        ng, f, forces = 1, shape.d_feat, False
+    cfg = dataclasses.replace(cfg, d_feat=f)
+    gd, gs, ng = _graph_specs(n, e, f, ng, edge_axes)
+    params = jax.eval_shape(
+        lambda k: NQ.init_nequip(cfg, k), jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: adamw_init(p, ADAMW), params)
+    pspec = jax.tree.map(lambda _: P(), params)
+    targets = dict(energy=_sds((ng,), jnp.float32))
+    tspec = dict(energy=P())
+    if forces:
+        targets["forces"] = _sds((n, 3), jnp.float32)
+        tspec["forces"] = P(None, None)
+
+    def loss_fn(p, graph_dict, tgt):
+        g = GraphBatch(n_graphs=ng, **graph_dict)
+        if forces:
+            en, fr = NQ.nequip_energy_forces(cfg, p, g)
+            return (jnp.mean((en - tgt["energy"]) ** 2)
+                    + jnp.mean((fr - tgt["forces"]) ** 2))
+        en = NQ.nequip_energy(cfg, p, g)
+        return jnp.mean((en - tgt["energy"]) ** 2)
+
+    def step(p, o, gdict, tgt):
+        loss, grads = jax.value_and_grad(loss_fn)(p, gdict, tgt)
+        p2, o2 = adamw_update(p, grads, o, ADAMW)
+        return p2, o2, loss
+
+    return Cell(step, (params, opt, gd, targets),
+                (pspec, _opt_specs(pspec), gs, tspec), "train",
+                dict(nodes=n, edges=e))
+
+
+# ------------------------------------------------------------- recsys cells
+
+def build_recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh) -> Cell:
+    batch_axes, model_axis = _axes(mesh)
+    dist = T.Dist(mesh=mesh, batch_axes=batch_axes, model_axis=model_axis)
+    params = jax.eval_shape(
+        lambda k: RS.init_recsys(cfg, k), jax.random.PRNGKey(0))
+
+    def pspec_of(path_key, leaf):
+        return P()
+    pspecs = jax.tree.map(lambda _: P(), params)
+    # row-shard the big tables over the model axis
+    if "table" in params:
+        pspecs["table"] = P(model_axis, None)
+        pspecs["table_w"] = P(model_axis, None)
+    if "items" in params:
+        pspecs["items"] = P(model_axis, None)
+
+    B = shape.global_batch
+    if cfg.interaction in ("fm", "cin"):
+        batch = dict(ids=_sds((B, cfg.n_sparse), jnp.int32),
+                     label=_sds((B,), jnp.int32))
+        bspec = dict(ids=P(batch_axes, None), label=P(batch_axes))
+    elif cfg.interaction == "transformer-seq":
+        batch = dict(hist=_sds((B, cfg.seq_len), jnp.int32),
+                     target=_sds((B,), jnp.int32),
+                     label=_sds((B,), jnp.int32))
+        bspec = dict(hist=P(batch_axes, None), target=P(batch_axes),
+                     label=P(batch_axes))
+    else:
+        batch = dict(hist=_sds((B, cfg.seq_len), jnp.int32),
+                     labels=_sds((B, cfg.seq_len), jnp.int32),
+                     negatives=_sds((B, cfg.n_negatives), jnp.int32))
+        bspec = dict(hist=P(batch_axes, None), labels=P(batch_axes, None),
+                     negatives=P(batch_axes, None))
+
+    if shape.kind == "train":
+        opt = jax.eval_shape(lambda p: adamw_init(p, ADAMW), params)
+
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(
+                lambda pp: RS.recsys_loss(cfg, pp, b, dist))(p)
+            p2, o2 = adamw_update(p, g, o, ADAMW)
+            return p2, o2, loss
+
+        return Cell(step, (params, opt, batch),
+                    (pspecs, _opt_specs(pspecs), bspec), "train",
+                    dict(batch=B))
+
+    if shape.kind == "serve":
+        def step(p, b):
+            out = RS.recsys_logits(cfg, p, b, dist)
+            if cfg.interaction == "bidir-seq":
+                out = out[:, -1, :]                   # user reprs
+            return out
+
+        return Cell(step, (params, batch), (pspecs, bspec), "serve",
+                    dict(batch=B))
+
+    # retrieval: one user context vs n_candidates (padded to shard evenly;
+    # padded scores are discarded by the caller)
+    NC = ((shape.n_candidates + 511) // 512) * 512
+    if cfg.interaction in ("fm", "cin"):
+        rb = dict(ids=_sds((1, cfg.n_sparse), jnp.int32),
+                  candidates=_sds((NC,), jnp.int32))
+        rspec = dict(ids=P(None, None), candidates=P(batch_axes + (model_axis,)))
+    else:
+        rb = dict(hist=_sds((1, cfg.seq_len), jnp.int32),
+                  candidates=_sds((NC,), jnp.int32))
+        rspec = dict(hist=P(None, None),
+                     candidates=P(batch_axes + (model_axis,)))
+
+    def step(p, b):
+        # single-chunk: the whole 1M-candidate batch shards over the mesh
+        return RS.retrieval_score(cfg, p, b, dist, chunk=NC)
+
+    return Cell(step, (params, rb), (pspecs, rspec), "retrieval",
+                dict(candidates=NC))
+
+
+# ----------------------------------------------------------- inversion cell
+
+def build_inversion_cell(cfg, shape: ShapeSpec, mesh) -> Cell:
+    """The paper's workload on the flat term-sharded mesh."""
+    from ..core.pool import IndexConfig, init_state
+    from ..core.distributed import make_invert_step, init_sharded_state
+    n = mesh.shape["shard"]
+    method = "sqa" if shape.name.endswith("sqa") else "fbb"
+    icfg = IndexConfig(
+        method=method, vocab=cfg.vocab_per_shard,
+        pool_words=cfg.pool_words_per_shard,
+        max_chunks=cfg.max_chunks_per_shard,
+        dope_words=cfg.dope_words_per_shard, max_len_per_term=1 << 26)
+    B = shape.global_batch
+    state = jax.eval_shape(lambda: init_sharded_state(icfg, n))
+    state["route_drop"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+    sspec = jax.tree.map(lambda _: P("shard"), state)
+    step = make_invert_step(icfg, mesh, "shard",
+                            cap_per_dest=max(1, 2 * (B // n) // n))
+    args = (state, _sds((B,), jnp.int32), _sds((B,), jnp.int32))
+    return Cell(step, args, (sspec, P("shard"), P("shard")), "invert",
+                dict(postings=B, method=method))
+
+
+# ------------------------------------------------------------------- router
+
+def build_cell(cfg, shape: ShapeSpec, mesh, **kw) -> Cell:
+    if cfg.family == "lm":
+        return build_lm_cell(cfg, shape, mesh, **kw)
+    if cfg.family == "gnn":
+        return build_gnn_cell(cfg, shape, mesh)
+    if cfg.family == "recsys":
+        return build_recsys_cell(cfg, shape, mesh)
+    if cfg.family == "inversion":
+        return build_inversion_cell(cfg, shape, mesh)
+    raise ValueError(cfg.family)

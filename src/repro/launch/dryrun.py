@@ -1,0 +1,297 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Run (CPU container; 512 placeholder devices for the production meshes):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh both
+
+Per cell this performs TWO kinds of compiles:
+
+* **fit**  — full depth, scan-over-layers + remat, production shardings.
+   ``compiled.memory_analysis()`` proves per-device residency; compile
+   success proves the collective program is coherent.
+* **cost** — (LMs) unrolled 2- and 4-layer variants; XLA's cost analysis
+   counts a ``while`` body once, so per-layer deltas extrapolate exactly
+   over the homogeneous stack.  Non-LM archs have no scan: fit == cost.
+
+Roofline terms (TPU v5e constants in ``mesh.HW``) and the parsed collective
+table land in ``dryrun_out/<cell>.json``; EXPERIMENTS.md reads from there.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import re             # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax            # noqa: E402
+import numpy as np    # noqa: E402
+
+from .mesh import make_production_mesh, HW               # noqa: E402
+from .cells import build_cell                            # noqa: E402
+from ..configs import get_config, list_configs, shapes_for  # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"= *(.*?) *(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GRP_ITOA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GRP_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _group_size(line: str) -> int:
+    m = _GRP_ITOA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GRP_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device communicated bytes per collective (ring-cost accounting).
+
+    HLO text carries per-device (post-SPMD) RESULT shapes; with group size g:
+      all-gather: recv (g-1)/g * result;  all-reduce: 2*(g-1)/g * result
+      reduce-scatter: (g-1) * result (result is the scattered piece)
+      all-to-all: (g-1)/g * result;      collective-permute: result
+    """
+    out = defaultdict(lambda: dict(count=0, bytes=0.0, result_bytes=0,
+                                   bytes_bf16eq=0.0))
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        rbytes = sum(_shape_bytes(s) for s in _SHAPE_RE.finditer(m.group(1)))
+        # XLA:CPU emulates bf16 in f32, so big collectives appear at 4 B/elt
+        # even when the TPU program would move bf16.  bf16-equivalent
+        # accounting halves f32 collectives > 1 MB (model dtype is bf16 and
+        # grad reduction is bf16); small f32 (norms, router) stay f32.
+        big_f32 = ("f32[" in m.group(1)) and rbytes > 2**20
+        g = _group_size(line)
+        if op == "all-gather":
+            comm = rbytes * (g - 1) / g
+        elif op == "all-reduce":
+            comm = 2.0 * rbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            comm = rbytes * (g - 1)
+        elif op == "all-to-all":
+            comm = rbytes * (g - 1) / g
+        else:                              # collective-permute
+            comm = float(rbytes)
+        out[op]["count"] += 1
+        out[op]["bytes"] += comm
+        out[op]["bytes_bf16eq"] += comm * (0.5 if big_f32 else 1.0)
+        out[op]["result_bytes"] += rbytes
+    return {k: dict(v) for k, v in out.items()}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful-FLOPs for the cell (the MFU numerator)."""
+    if cfg.family == "inversion":
+        # integer workload: count the sort + searchsorted + scatter work as
+        # ~(2 log2 B_loc + log2 K + 8) ops/posting (the throughput model)
+        import math
+        return float(shape.global_batch) * (2 * math.log2(65536) + 12 + 8)
+    if cfg.family == "lm":
+        d, L = cfg.d_model, cfg.n_layers
+        H, dh = cfg.n_heads, cfg.d_head
+        n_mm = cfg.params_active - cfg.vocab * d      # embed gather: no MM
+        B, S = shape.global_batch, shape.seq_len
+        toks = B * S
+        if shape.kind == "train":
+            return 6.0 * n_mm * toks + 6.0 * L * toks * S * H * dh
+        if shape.kind == "prefill":
+            return 2.0 * n_mm * toks + 2.0 * L * toks * S * H * dh
+        return 2.0 * n_mm * B + 4.0 * L * B * S * H * dh   # decode
+    if cfg.family == "gnn":
+        C = cfg.d_hidden
+        n, e = shape.n_nodes or 4096, shape.n_edges or 8192
+        if shape.name == "molecule":
+            n, e = 3968, 8192
+        if shape.name == "minibatch_lg":
+            n, e = 262144, 262144
+        per_edge = cfg.n_rbf * 32 + 32 * 10 * C + 10 * C * 13 * 2
+        per_node = 2 * (2 * C) * C * 13 * 2 + 2 * C * C
+        fwd = cfg.n_layers * (e * per_edge + n * per_node)
+        return 3.0 * fwd * 2       # fwd+bwd(2x) via 6x fwd-like*... 3*fwd*2
+    # recsys
+    B = shape.global_batch if shape.kind != "retrieval" else shape.n_candidates
+    D = cfg.embed_dim
+    if cfg.interaction == "fm":
+        f = 2 * (cfg.n_sparse * D * 400 + 400 * 400 * 2 + 400)
+    elif cfg.interaction == "cin":
+        f = 2 * sum((a * cfg.n_sparse) * b * D for a, b in
+                    zip((cfg.n_sparse, 200, 200), (200, 200, 200)))
+        f += 2 * (cfg.n_sparse * D * 400 + 400 * 400 + 400)
+    elif cfg.interaction == "transformer-seq":
+        S = cfg.seq_len + 1
+        f = cfg.n_blocks * (8 * S * D * D + 4 * S * S * D) \
+            + 2 * S * D * 1024 + 2 * 1024 * 512 + 2 * 512 * 256
+    else:
+        S = cfg.seq_len
+        f = cfg.n_blocks * (8 * S * D * D + 4 * S * S * D)
+        f += 2 * S * (1 + cfg.n_negatives) * D
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return float(B) * f * mult
+
+
+def compile_cell(cfg, shape, mesh, *, n_layers_override=None,
+                 scan_layers=True):
+    cell = build_cell(cfg, shape, mesh, **(
+        dict(n_layers_override=n_layers_override, scan_layers=scan_layers)
+        if cfg.family == "lm" else {}))
+    named = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), cell.in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    t0 = time.time()
+    lowered = jax.jit(cell.step, in_shardings=named).lower(*cell.args)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    mem = dict(
+        argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+        alias_bytes=int(getattr(ma, "alias_size_in_bytes", 0)),
+    )
+    colls = parse_collectives(compiled.as_text())
+    return dict(
+        flops=float(ca.get("flops", 0.0)),
+        bytes=float(ca.get("bytes accessed", 0.0)),
+        memory=mem, collectives=colls, compile_s=round(dt, 2),
+        meta=cell.meta, kind=cell.kind,
+    )
+
+
+def run_cell(cfg, shape, mesh_name: str, outdir: str) -> dict:
+    multi = mesh_name == "2pod"
+    n_chips = 512 if multi else 256
+    if cfg.family == "inversion":       # the paper's flat term-sharded mesh
+        import jax as _jax
+        mesh = _jax.make_mesh((n_chips,), ("shard",),
+                              axis_types=(_jax.sharding.AxisType.Auto,))
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+
+    rec = dict(arch=cfg.name, shape=shape.name, mesh=mesh_name,
+               chips=n_chips, ok=False)
+    try:
+        fit = compile_cell(cfg, shape, mesh)
+        rec["fit"] = fit
+        if cfg.family == "lm":
+            c2 = compile_cell(cfg, shape, mesh, n_layers_override=2,
+                              scan_layers=False)
+            c4 = compile_cell(cfg, shape, mesh, n_layers_override=4,
+                              scan_layers=False)
+            L = cfg.n_layers
+            per_layer_f = (c4["flops"] - c2["flops"]) / 2
+            base_f = c2["flops"] - 2 * per_layer_f
+            flops_dev = base_f + L * per_layer_f
+            per_layer_b = (c4["bytes"] - c2["bytes"]) / 2
+            bytes_dev = (c2["bytes"] - 2 * per_layer_b) + L * per_layer_b
+            coll = {}
+            for op in set(c2["collectives"]) | set(c4["collectives"]):
+                coll[op] = {}
+                for key in ("bytes", "bytes_bf16eq", "count"):
+                    v2 = c2["collectives"].get(op, {}).get(key, 0)
+                    v4 = c4["collectives"].get(op, {}).get(key, 0)
+                    pv = (v4 - v2) / 2
+                    coll[op][key] = (v2 - 2 * pv) + L * pv
+            rec["cost_compiles"] = dict(l2=c2, l4=c4)
+        else:
+            flops_dev = fit["flops"]
+            bytes_dev = fit["bytes"]
+            coll = fit["collectives"]
+
+        coll_bytes_dev = sum(v["bytes"] for v in coll.values())
+        coll_bf16_dev = sum(v.get("bytes_bf16eq", v["bytes"])
+                            for v in coll.values())
+        terms = dict(
+            compute_s=flops_dev / HW["peak_flops_bf16"],
+            memory_s=bytes_dev / HW["hbm_bw"],
+            collective_s=coll_bf16_dev / HW["ici_bw"],
+            collective_s_raw_f32=coll_bytes_dev / HW["ici_bw"],
+        )
+        core = {k: terms[k] for k in ("compute_s", "memory_s",
+                                      "collective_s")}
+        dom = max(core, key=core.get)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+            collectives=coll, collective_bytes_per_device=coll_bytes_dev,
+            terms=terms, dominant=dom,
+            model_flops_total=mf,
+            model_flops_per_device=mf / n_chips,
+            useful_ratio=(mf / n_chips) / flops_dev if flops_dev else None,
+            ok=True,
+        )
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    os.makedirs(outdir, exist_ok=True)
+    fn = f"{cfg.name}__{shape.name}__{mesh_name}.json"
+    with open(os.path.join(outdir, fn), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["1pod", "2pod",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="dryrun_out")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    meshes = ["1pod", "2pod"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = 0
+    for name in archs:
+        cfg = get_config(name)
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_name in meshes:
+                t0 = time.time()
+                rec = run_cell(cfg, shape, mesh_name, args.outdir)
+                ok = rec.get("ok")
+                n_ok += bool(ok)
+                n_fail += not ok
+                msg = ("OK  dom=%s mem=%.2fGB" % (
+                    rec.get("dominant"),
+                    (rec["fit"]["memory"]["argument_bytes"]
+                     + rec["fit"]["memory"]["temp_bytes"]) / 2**30)
+                    if ok else "FAIL " + rec.get("error", "")[:120])
+                print(f"[{name} {shape.name} {mesh_name}] "
+                      f"{time.time()-t0:.0f}s {msg}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

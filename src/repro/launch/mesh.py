@@ -1,0 +1,31 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_flat_mesh", "HW"]
+
+#: TPU v5e hardware constants used by the roofline analysis.
+HW = dict(
+    peak_flops_bf16=197e12,     # per chip
+    hbm_bw=819e9,               # bytes/s per chip
+    ici_bw=50e9,                # bytes/s per link (~per-chip usable)
+    hbm_bytes=16 * 1024**3,
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=256 chips single pod; (2,16,16)=512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_flat_mesh(n: int | None = None, name: str = "shard"):
+    """1-D mesh over all devices (the inversion service layout)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), (name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

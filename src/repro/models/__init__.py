@@ -1,0 +1,3 @@
+from . import common, attention, moe, transformer
+
+__all__ = ["common", "attention", "moe", "transformer"]

@@ -1,0 +1,125 @@
+"""GQA attention (RoPE, optional QKV bias / qk_norm) + decode path.
+
+Training/prefill uses the lax.scan online-softmax flash path (TPU kernel in
+``kernels/flash_attention`` is the hardware-native equivalent, validated by
+interpret-mode tests).  Decode writes the new token into the KV cache with a
+one-hot blend (NOT dynamic_update_slice: a masked blend partitions cleanly
+when the sequence axis is sharded — SP for ``long_500k``), then attends with
+a length mask; one token against an S-long cache is O(S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import chunked_attention_ref
+from .common import dense_init, rms_norm, rotary, apply_rope
+
+__all__ = ["init_attn", "attn_apply", "decode_attn_apply"]
+
+
+def init_attn(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], (d, H * dh), dtype),
+        wk=dense_init(ks[1], (d, KV * dh), dtype),
+        wv=dense_init(ks[2], (d, KV * dh), dtype),
+        wo=dense_init(ks[3], (H * dh, d), dtype),
+    )
+    if cfg.qkv_bias:
+        p |= dict(bq=jnp.zeros((H * dh,), dtype),
+                  bk=jnp.zeros((KV * dh,), dtype),
+                  bv=jnp.zeros((KV * dh,), dtype))
+    if cfg.qk_norm:
+        p |= dict(q_norm=jnp.ones((dh,), dtype),
+                  k_norm=jnp.ones((dh,), dtype))
+    return p
+
+
+def _qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg):
+    cos, sin = rotary(positions, cfg.d_head, cfg.rope_theta)  # [B,S,dh/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def attn_apply(p, x, cfg, positions, *, chunk: int = 1024,
+               dist=None) -> jnp.ndarray:
+    """Causal training/prefill attention.  x [B,S,d], positions int32[B,S].
+
+    Distribution: the residual stream arrives sequence-sharded (SP); here
+    we transition to head sharding (TP) so the per-chunk score tensors are
+    [B, H/tp, S, chunk] rather than [B, H, S/tp, chunk] with H replicated —
+    16x smaller per device AND rematerialized (inner checkpoint) instead of
+    saved per chunk.
+    """
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    B, S, d = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    qT = q.transpose(0, 2, 1, 3)                      # [B,H,S,dh]
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    cst = None
+    if dist is not None and dist.mesh is not None:
+        hspec = P(dist.batch_axes, dist.model_axis, None, None)
+        qT = dist.constraint(qT, hspec)
+
+        def cst(t):
+            return dist.constraint(t, hspec)
+
+    attn = _jax.checkpoint(functools.partial(
+        chunked_attention_ref, causal=True, chunk=min(chunk, S),
+        constrain=cst))
+    o = attn(qT, kT, vT)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return o @ p["wo"]
+
+
+def decode_attn_apply(p, x1, cfg, cache_k, cache_v, pos
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step.
+
+    x1 [B,1,d]; cache_k/v [B,S,KV,dh]; pos int32[B] (current write index).
+    Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    B, S = cache_k.shape[0], cache_k.shape[1]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // KV
+    q, k1, v1 = _qkv(p, x1, cfg)                      # [B,1,*,dh]
+    q, k1 = _rope_qk(q, k1, pos[:, None], cfg)
+
+    # one-hot blend write (shards cleanly on the S axis)
+    onehot = (jnp.arange(S, dtype=jnp.int32)[None] == pos[:, None])
+    oh = onehot[..., None, None].astype(cache_k.dtype)
+    cache_k = cache_k * (1 - oh) + k1 * oh
+    cache_v = cache_v * (1 - oh) + v1 * oh
+
+    qg = q.reshape(B, KV, G, dh)                      # grouped heads
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) / (dh ** 0.5)
+    live = jnp.arange(S, dtype=jnp.int32)[None] <= pos[:, None]
+    s = jnp.where(live[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * dh).astype(x1.dtype)
+    return o @ p["wo"], cache_k, cache_v

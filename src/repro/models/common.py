@@ -1,0 +1,58 @@
+"""Shared model building blocks (pure-function style, dict pytree params)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "dense_init", "linear", "rotary",
+           "apply_rope", "Param", "he_init"]
+
+Param = Dict[str, Any]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    # variance in f32, but cast rsqrt DOWN before the full-size multiply:
+    # keeping [B,S,d] in the model dtype keeps every adjacent TP/SP
+    # collective (and its backward) at 2 bytes/elt instead of 4.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+            * scale + bias)
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def he_init(key, shape, dtype=jnp.float32):
+    return dense_init(key, shape, dtype, scale=(2.0 / shape[-2]) ** 0.5)
+
+
+def linear(x, w, b=None):
+    y = x @ w
+    return y if b is None else y + b
+
+
+def rotary(positions: jnp.ndarray, dim: int, theta: float = 10000.0):
+    """positions int32[...,S] -> (cos, sin) f32[...,S, dim/2]."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x f[..., S, D] with (cos,sin) f32[..., S, D/2] broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)

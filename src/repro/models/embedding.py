@@ -1,0 +1,57 @@
+"""Huge sparse embedding tables: row-sharded lookup + EmbeddingBag.
+
+JAX has no EmbeddingBag and no CSR — the bag is take + masked segment
+reduce (Pallas kernel in ``kernels/segment_bag`` is the TPU-native version).
+The row-sharded lookup avoids GSPMD's all-gather-the-table fallback: under
+shard_map each model shard masks ids to its row range, takes locally, and a
+``psum`` over the model axis assembles rows — collective volume is
+O(batch × dim), never O(rows × dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.segment_bag import segment_bag_ref
+
+__all__ = ["lookup", "bag_lookup", "make_sharded_lookup"]
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Plain gather (single-device / replicated table)."""
+    return table[jnp.maximum(ids, 0)] * (ids >= 0)[..., None].astype(
+        table.dtype)
+
+
+def bag_lookup(table, ids, mode: str = "sum"):
+    """Multi-hot EmbeddingBag: ids int32[..., L] (-1 pad) -> [..., D]."""
+    return segment_bag_ref(table, ids, mode=mode)
+
+
+def make_sharded_lookup(mesh, model_axis: str = "model",
+                        batch_axes: Tuple[str, ...] = ("data",)):
+    """Row-sharded lookup: table [V,D] sharded on rows over ``model_axis``;
+    ids [...] sharded over ``batch_axes``; result [..., D] batch-sharded."""
+
+    def local_fn(ids, table):
+        v_loc = table.shape[0]
+        row0 = jax.lax.axis_index(model_axis) * v_loc
+        local = (ids >= row0) & (ids < row0 + v_loc)
+        rows = jnp.where(local, ids - row0, 0)
+        out = table[rows] * local[..., None].astype(table.dtype)
+        return jax.lax.psum(out, model_axis)
+
+    def apply(table, ids):
+        nd = ids.ndim
+        return jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(batch_axes, *([None] * (nd - 1))),
+                      P(model_axis, None)),
+            out_specs=P(batch_axes, *([None] * nd)),
+            check_vma=False)(ids, table)
+
+    return apply

@@ -1,0 +1,216 @@
+"""Mixture-of-Experts FFN: sort-based capacity routing, EP×TP sharding.
+
+Dispatch is the same algorithm as the inversion engine's term routing
+(sort by destination, rank within segment, capacity clip, scatter) — the
+paper's batched-append machinery and MoE dispatch are one pattern, which is
+why ``core.distributed`` and this module mirror each other.
+
+Two execution paths with identical math (modulo capacity drops):
+
+* ``moe_apply_local`` — single-device grouped einsum (smoke tests, refs);
+* ``make_moe_sharded`` — shard_map: experts sharded over the EP axes (data),
+  expert FFN hidden dim TP-sharded over the model axis, token dispatch via
+  ``all_to_all`` over EP, partial-sum combine via ``psum`` over TP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init
+
+__all__ = ["init_moe", "moe_apply_local", "make_moe_sharded", "router_topk"]
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return dict(
+        wg=dense_init(ks[0], (d, E), jnp.float32),       # router in f32
+        w_gate=dense_init(ks[1], (E, d, ff), dtype),
+        w_up=dense_init(ks[2], (E, d, ff), dtype),
+        w_down=dense_init(ks[3], (E, ff, d), dtype),
+    )
+
+
+def router_topk(x2, wg, top_k):
+    """x2 [T,d] -> (weights [T,k] f32, ids [T,k] int32); weights sum to 1."""
+    logits = x2.astype(jnp.float32) @ wg
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, ids.astype(jnp.int32)
+
+
+def _dispatch_slots(ids_f, n_buckets, cap):
+    """Sort-based capacity dispatch: flat ids [N] -> slot [N] in [0,nb*cap].
+
+    slot == nb*cap means dropped.  Returns (slot, order) with ``order`` the
+    sorting permutation (callers gather payloads via the inverted maps —
+    payload tensors are only ever GATHERED, never scattered, so XLA:CPU's
+    scatter expansion can't inflate [N, d] buffers).
+    """
+    N = ids_f.shape[0]
+    order = jnp.argsort(ids_f, stable=True)
+    ids_s = ids_f[order]
+    iota = jnp.arange(N, dtype=jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+    anchor = jax.lax.cummax(jnp.where(seg_start, iota, 0))
+    pos = iota - anchor
+    keep = (ids_s >= 0) & (ids_s < n_buckets) & (pos < cap)
+    slot = jnp.where(keep, ids_s * cap + pos, n_buckets * cap)
+    return slot, order
+
+
+def _invert_slots(slot, n_slots):
+    """inv[j] = sorted-assignment index filling slot j, or -1 (1-D scatter)."""
+    n = slot.shape[0]
+    return jnp.full((n_slots + 1,), -1, jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")[:-1]
+
+
+def _invert_perm(order):
+    n = order.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def _expert_ffn(xb, w_gate, w_up, w_down):
+    """xb [E,C,d] -> [E,C,d] SwiGLU grouped einsum."""
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_apply_local(p, x2, cfg, capacity_factor: float | None = None
+                    ) -> jnp.ndarray:
+    """x2 [T,d] -> [T,d]; single-device reference path (gather-only)."""
+    T, d = x2.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    C = max(1, int(T * k * cf) // E)
+    w, ids = router_topk(x2, p["wg"], k)
+    ids_f = ids.reshape(-1)
+    slot, order = _dispatch_slots(ids_f, E, C)
+    inv = _invert_slots(slot, E * C)                   # slot -> sorted idx
+    filled = inv >= 0
+    tok_of_sorted = order // k
+    src = tok_of_sorted[jnp.maximum(inv, 0)]
+    xb = jnp.where(filled[:, None], x2[src], 0).reshape(E, C, d)
+    yb = _expert_ffn(xb, p["w_gate"], p["w_up"], p["w_down"])
+    yb = yb.reshape(E * C, d)
+    # per original assignment a: its slot is slot[inv_perm[a]]
+    sl = slot[_invert_perm(order)]                     # [T*k]
+    contrib = jnp.where((sl < E * C)[:, None],
+                        yb[jnp.minimum(sl, E * C - 1)], 0.0)
+    y = (contrib.reshape(T, k, d) * w[..., None].astype(x2.dtype)).sum(1)
+    return y
+
+
+def make_moe_sharded(mesh, ep_axes: Tuple[str, ...] = ("data",),
+                     tp_axis: str = "model", chunk_mode: str = "scan"):
+    """Build the distributed MoE apply: EP over ``ep_axes``, TP over hidden.
+
+    Token layout: x2 [T,d] sharded over ep_axes (batch), replicated over
+    tp_axis.  Expert weights: [E,d,ff] sharded E->ep_axes, ff->tp_axis.
+
+    chunk_mode: 'scan' sequences the dispatch over token chunks inside a
+    ``lax.scan`` (buffers reused — the memory-fit path); 'none' dispatches
+    all local tokens at once (full FLOP visibility — the cost-analysis
+    path; XLA counts a scan body only once).
+    """
+    n_ep = 1
+    for a in ep_axes:
+        n_ep *= mesh.shape[a]
+
+    def chunk_fn(x2, wg, w_gate, w_up, w_down, *, cfg, cf):
+        Tl, d = x2.shape
+        E, k = cfg.n_experts, cfg.top_k
+        El = E // n_ep                                 # experts per EP row
+        cap = max(1, int(Tl * k * cf) // n_ep)         # per-destination cap
+
+        w, ids = router_topk(x2, wg, k)                # local tokens
+        ids_f = ids.reshape(-1)
+        owner = ids_f // El
+        slot, order = _dispatch_slots(owner, n_ep, cap)
+        inv = _invert_slots(slot, n_ep * cap)          # send slot -> sorted
+        filled = inv >= 0
+        invc = jnp.maximum(inv, 0)
+        src_tok = (order // k)[invc]
+        pay_x = jnp.where(filled[:, None], x2[src_tok],
+                          0).reshape(n_ep, cap, d)
+        pay_e = jnp.where(filled, (ids_f[order] % El)[invc],
+                          -1).reshape(n_ep, cap)
+
+        ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+        recv_x = jax.lax.all_to_all(pay_x, ax, 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(pay_e, ax, 0, 0, tiled=True)
+
+        # bucket received tokens into local experts (gather-only again)
+        rx = recv_x.reshape(n_ep * cap, d)
+        re = recv_e.reshape(n_ep * cap)
+        Cl = max(1, (cap * n_ep) // El)    # cf already applied in `cap`
+        slot2, order2 = _dispatch_slots(re, El, Cl)
+        inv2 = _invert_slots(slot2, El * Cl)
+        filled2 = inv2 >= 0
+        xb = jnp.where(filled2[:, None], rx[order2[jnp.maximum(inv2, 0)]],
+                       0).reshape(El, Cl, d)
+        yb = _expert_ffn(xb, w_gate, w_up, w_down).reshape(El * Cl, d)
+        yb = jax.lax.psum(yb, tp_axis)                 # TP partial-ff combine
+
+        # back[j] = FFN output for received slot j (gather via slot2)
+        sl2 = slot2[_invert_perm(order2)]              # [n_ep*cap]
+        back = jnp.where((sl2 < El * Cl)[:, None],
+                         yb[jnp.minimum(sl2, El * Cl - 1)], 0.0)
+        back = jax.lax.all_to_all(back.reshape(n_ep, cap, d), ax, 0, 0,
+                                  tiled=True).reshape(n_ep * cap, d)
+        # back[j] is now the output for send-slot j of THIS device
+        sl = slot[_invert_perm(order)]                 # [Tl*k]
+        contrib = jnp.where((sl < n_ep * cap)[:, None],
+                            back[jnp.minimum(sl, n_ep * cap - 1)], 0.0)
+        y = (contrib.reshape(Tl, k, d)
+             * w[..., None].astype(x2.dtype)).sum(axis=1)
+        return y
+
+    def local_fn(x2, wg, w_gate, w_up, w_down, *, cfg, cf,
+                 chunk: int = 4096):
+        """Token-chunked dispatch: bounds the transient buffer footprint.
+
+        All dispatch/a2a/FFN buffers scale with the chunk, not with the
+        full local token count — the same total collective volume moves in
+        ``Tl/chunk`` smaller exchanges.
+        """
+        Tl, d = x2.shape
+        if chunk_mode == "none" or Tl <= chunk:
+            return chunk_fn(x2, wg, w_gate, w_up, w_down, cfg=cfg, cf=cf)
+        assert Tl % chunk == 0, (Tl, chunk)
+        # scan + per-chunk remat: ONE chunk's dispatch buffers live at a
+        # time (structural reuse via the loop), saved residual = the chunk
+        # inputs only.
+        f = jax.checkpoint(functools.partial(chunk_fn, cfg=cfg, cf=cf))
+
+        def body(_, xc):
+            return None, f(xc, wg, w_gate, w_up, w_down)
+
+        _, ys = jax.lax.scan(body, None, x2.reshape(-1, chunk, d))
+        return ys.reshape(Tl, d)
+
+    def apply(p, x2, cfg, capacity_factor: float | None = None):
+        cf = capacity_factor or cfg.capacity_factor
+        fn = functools.partial(local_fn, cfg=cfg, cf=cf)
+        sharded = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(ep_axes, None), P(None, None),
+                      P(ep_axes, None, tp_axis), P(ep_axes, None, tp_axis),
+                      P(ep_axes, tp_axis, None)),
+            out_specs=P(ep_axes, None),
+            check_vma=False)
+        return sharded(x2, p["wg"], p["w_gate"], p["w_up"], p["w_down"])
+
+    return apply

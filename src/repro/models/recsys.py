@@ -1,0 +1,242 @@
+"""The four assigned recsys architectures over shared embedding machinery.
+
+* deepfm  — FM (sum-square trick) + deep MLP            [arXiv:1703.04247]
+* xdeepfm — CIN (outer-product compress) + deep MLP     [arXiv:1803.05170]
+* bst     — behaviour-sequence transformer + MLP        [arXiv:1905.06874]
+* bert4rec— bidirectional encoder, masked-item training [arXiv:1904.06690]
+
+CTR models view the 39 sparse fields as one big offset table (row count =
+n_sparse × field_vocab) so row-sharding covers every field uniformly.
+``retrieval_score`` scores one user context against N candidates (the
+``retrieval_cand`` shape): sequence models use user-repr · item-embedding
+dot products; CTR models broadcast the user fields and chunk-score.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, he_init, layer_norm
+from .embedding import lookup, bag_lookup, make_sharded_lookup
+
+__all__ = ["init_recsys", "recsys_logits", "recsys_loss", "retrieval_score",
+           "bert4rec_masked_loss"]
+
+
+# ------------------------------------------------------------ shared pieces
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [dict(w=he_init(k, (a, b), dtype), b=jnp.zeros((b,), dtype))
+            for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _enc_init(key, d, n_heads, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return dict(
+        wq=dense_init(ks[0], (d, d), dtype), wk=dense_init(ks[1], (d, d),
+                                                           dtype),
+        wv=dense_init(ks[2], (d, d), dtype), wo=dense_init(ks[3], (d, d),
+                                                           dtype),
+        w1=he_init(ks[4], (d, d_ff), dtype), w2=dense_init(ks[5], (d_ff, d),
+                                                           dtype),
+        ln1_s=jnp.ones((d,), dtype), ln1_b=jnp.zeros((d,), dtype),
+        ln2_s=jnp.ones((d,), dtype), ln2_b=jnp.zeros((d,), dtype))
+
+
+def _enc_apply(p, x, n_heads, mask=None):
+    """Bidirectional MHA encoder block (post-LN, BERT-style)."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    q = (x @ p["wq"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (dh ** 0.5)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", a, v).transpose(0, 2, 1, 3)
+    x = layer_norm(x + o.reshape(B, S, d) @ p["wo"], p["ln1_s"], p["ln1_b"])
+    h = jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+    return layer_norm(x + h, p["ln2_s"], p["ln2_b"])
+
+
+# -------------------------------------------------------------------- init
+
+def init_recsys(cfg, key) -> Dict:
+    D = cfg.embed_dim
+    ks = jax.random.split(key, 8)
+    p: Dict = {}
+    if cfg.interaction in ("fm", "cin"):
+        rows = cfg.n_sparse * cfg.field_vocab
+        p["table"] = dense_init(ks[0], (rows, D), jnp.float32, scale=0.01)
+        p["table_w"] = dense_init(ks[1], (rows, 1), jnp.float32, scale=0.01)
+        p["bias"] = jnp.zeros(())
+        mlp_in = cfg.n_sparse * D
+        if cfg.mlp:
+            p["mlp"] = _mlp_init(ks[2], (mlp_in,) + tuple(cfg.mlp) + (1,))
+        if cfg.interaction == "cin":
+            hs = (cfg.n_sparse,) + tuple(cfg.cin_layers)
+            p["cin"] = [dense_init(k, (hs[i] * cfg.n_sparse, hs[i + 1]),
+                                   jnp.float32)
+                        for i, k in enumerate(
+                            jax.random.split(ks[3], len(cfg.cin_layers)))]
+            p["cin_out"] = dense_init(ks[4], (sum(cfg.cin_layers), 1),
+                                      jnp.float32)
+    else:
+        # sequence models: item table (+1 row = [MASK]), learned positions;
+        # rows padded to a multiple of 4096 so row-sharding divides evenly
+        rows = ((cfg.n_items + 1 + 4095) // 4096) * 4096
+        p["items"] = dense_init(ks[0], (rows, D), jnp.float32,
+                                scale=0.02)
+        p["pos"] = dense_init(ks[1], (cfg.seq_len + 1, D), jnp.float32,
+                              scale=0.02)
+        p["blocks"] = [_enc_init(k, D, cfg.n_heads, 4 * D)
+                       for k in jax.random.split(ks[2], cfg.n_blocks)]
+        if cfg.interaction == "transformer-seq":      # bst: MLP head on flat
+            flat = (cfg.seq_len + 1) * D
+            p["mlp"] = _mlp_init(ks[3], (flat,) + tuple(cfg.mlp) + (1,))
+    return p
+
+
+# ------------------------------------------------------------------ forward
+
+def _ctr_embed(cfg, p, ids, dist=None):
+    """ids int32[B, F] per-field -> offset rows -> [B, F, D] and [B, F]."""
+    offs = jnp.arange(cfg.n_sparse, dtype=jnp.int32) * cfg.field_vocab
+    rows = ids + offs[None, :]
+    if dist is not None and dist.mesh is not None:
+        lk = make_sharded_lookup(dist.mesh, dist.model_axis, dist.batch_axes)
+        emb = lk(p["table"], rows)
+        w1 = lk(p["table_w"], rows)[..., 0]
+    else:
+        emb = lookup(p["table"], rows)
+        w1 = lookup(p["table_w"], rows)[..., 0]
+    return emb, w1
+
+
+def _cin_apply(cfg, p, x0):
+    """Compressed Interaction Network.  x0 [B, F, D]."""
+    B, F, D = x0.shape
+    xk = x0
+    outs = []
+    for w in p["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0).reshape(B, -1, D)
+        xk = jnp.einsum("bzd,zh->bhd", z, w)
+        xk = jax.nn.relu(xk)
+        outs.append(xk.sum(-1))                        # [B, H_k]
+    return jnp.concatenate(outs, -1) @ p["cin_out"]   # [B, 1]
+
+
+def recsys_logits(cfg, p, batch, dist=None) -> jnp.ndarray:
+    """CTR logit [B] (fm/cin/bst) or sequence reprs (bert4rec)."""
+    if cfg.interaction in ("fm", "cin"):
+        emb, w1 = _ctr_embed(cfg, p, batch["ids"], dist)   # [B,F,D],[B,F]
+        B = emb.shape[0]
+        logit = p["bias"] + w1.sum(-1)
+        if cfg.interaction == "fm":
+            s = emb.sum(1)                             # [B, D]
+            fm2 = 0.5 * (s * s - (emb * emb).sum(1)).sum(-1)
+            logit = logit + fm2
+        else:
+            logit = logit + _cin_apply(cfg, p, emb)[:, 0]
+        if cfg.mlp:
+            logit = logit + _mlp_apply(p["mlp"], emb.reshape(B, -1))[:, 0]
+        return logit
+
+    if cfg.interaction == "transformer-seq":           # bst
+        hist, target = batch["hist"], batch["target"]  # [B,S], [B]
+        seq = jnp.concatenate([hist, target[:, None]], 1)
+        x = lookup(p["items"], seq) + p["pos"][None, : seq.shape[1]]
+        mask = seq >= 0
+        for blk in p["blocks"]:
+            x = _enc_apply(blk, x, cfg.n_heads, mask)
+        B = x.shape[0]
+        return _mlp_apply(p["mlp"], x.reshape(B, -1))[:, 0]
+
+    # bert4rec: return contextual reprs [B, S, D]
+    seq = batch["hist"]
+    x = lookup(p["items"], seq) + p["pos"][None, : seq.shape[1]]
+    mask = seq >= 0
+    for blk in p["blocks"]:
+        x = _enc_apply(blk, x, cfg.n_heads, mask)
+    return x
+
+
+def recsys_loss(cfg, p, batch, dist=None) -> jnp.ndarray:
+    if cfg.interaction == "bidir-seq":
+        return bert4rec_masked_loss(cfg, p, batch, dist)
+    logit = recsys_logits(cfg, p, batch, dist)
+    y = batch["label"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return loss.mean()
+
+
+def bert4rec_masked_loss(cfg, p, batch, dist=None) -> jnp.ndarray:
+    """Sampled-softmax masked-item objective.
+
+    batch: hist [B,S] with [MASK]=n_items rows at masked slots,
+           labels [B,S] (-1 where unmasked), negatives [B, n_neg] ids.
+    """
+    h = recsys_logits(cfg, p, batch, dist)             # [B,S,D]
+    labels, negs = batch["labels"], batch["negatives"]
+    m = labels >= 0
+    pos_e = lookup(p["items"], jnp.maximum(labels, 0))     # [B,S,D]
+    neg_e = lookup(p["items"], negs)                       # [B,n_neg,D]
+    pos_s = jnp.einsum("bsd,bsd->bs", h, pos_e)
+    neg_s = jnp.einsum("bsd,bnd->bsn", h, neg_e)
+    logits = jnp.concatenate([pos_s[..., None], neg_s], -1)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+    ll = pos_s.astype(jnp.float32) - logz
+    mf = m.astype(jnp.float32)
+    return -(ll * mf).sum() / jnp.maximum(mf.sum(), 1.0)
+
+
+# ---------------------------------------------------------------- retrieval
+
+def retrieval_score(cfg, p, batch, dist=None, chunk: int = 65536
+                    ) -> jnp.ndarray:
+    """Score ONE user context against N candidates -> scores [N]."""
+    if cfg.interaction == "bidir-seq":
+        h = recsys_logits(cfg, p, dict(hist=batch["hist"]), dist)  # [1,S,D]
+        user = h[:, -1, :]                               # [1, D]
+        cand = lookup(p["items"], batch["candidates"])   # [N, D]
+        return (cand @ user[0]).astype(jnp.float32)
+    if cfg.interaction == "transformer-seq":             # bst: target = cand
+        N = batch["candidates"].shape[0]
+
+        def score(chunk_ids):
+            b = dict(hist=jnp.broadcast_to(batch["hist"],
+                                           (chunk_ids.shape[0],)
+                                           + batch["hist"].shape[1:]),
+                     target=chunk_ids)
+            return recsys_logits(cfg, p, b, dist)
+        if N <= chunk:
+            return score(batch["candidates"])
+        return jax.lax.map(score,
+                           batch["candidates"].reshape(-1, chunk)).reshape(-1)
+    # CTR models: candidates vary the LAST field; user fields broadcast
+    N = batch["candidates"].shape[0]
+
+    def score(chunk_ids):
+        ids = jnp.broadcast_to(batch["ids"],
+                               (chunk_ids.shape[0], cfg.n_sparse))
+        ids = ids.at[:, -1].set(chunk_ids)
+        return recsys_logits(cfg, p, dict(ids=ids), dist)
+    if N <= chunk:
+        return score(batch["candidates"])
+    return jax.lax.map(score,
+                       batch["candidates"].reshape(-1, chunk)).reshape(-1)

@@ -1,0 +1,224 @@
+"""Unified decoder-only LM covering all five assigned configurations.
+
+One implementation, config-switched features: GQA (any kv count), QKV bias
+(qwen2), qk_norm (qwen3*), dense SwiGLU or MoE FFN (moonshot / qwen3-moe).
+Layers are homogeneous, so the stack runs either as a rematerialized
+``lax.scan`` over stacked params (memory-fit path) or as an unrolled python
+loop (cost-analysis path) — both from the same block function.
+
+Distribution is GSPMD-first: activations/params carry PartitionSpecs from
+``sharding/rules.py``; the MoE layer drops into shard_map (EP×TP) when a
+mesh is present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init, rms_norm
+from .attention import init_attn, attn_apply, decode_attn_apply
+from .moe import init_moe, moe_apply_local, make_moe_sharded
+
+__all__ = ["Dist", "init_lm", "lm_logits", "lm_loss", "init_decode_state",
+           "decode_step", "DTYPES"]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Distribution context: mesh + logical axis assignment."""
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ("data",)   # DP/FSDP axes ((pod,data) 2-pod)
+    model_axis: str = "model"                 # TP / EP-hidden / vocab axis
+    seq_axes: Tuple[str, ...] = ()            # SP axes for long-context decode
+    scan_layers: bool = True                  # scan+remat vs unrolled
+    remat: bool = True
+
+    def constraint(self, x, spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+
+# --------------------------------------------------------------------- init
+
+def _init_mlp(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return dict(w_gate=dense_init(ks[0], (d, ff), dtype),
+                w_up=dense_init(ks[1], (d, ff), dtype),
+                w_down=dense_init(ks[2], (ff, d), dtype))
+
+
+def _init_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    blk = dict(
+        ln1=jnp.ones((cfg.d_model,), dtype),
+        ln2=jnp.ones((cfg.d_model,), dtype),
+        attn=init_attn(k1, cfg, dtype),
+    )
+    blk["moe" if cfg.moe else "mlp"] = (
+        init_moe(k2, cfg, dtype) if cfg.moe else _init_mlp(k2, cfg, dtype))
+    return blk
+
+
+def init_lm(cfg, key) -> Dict:
+    dtype = DTYPES[cfg.dtype]
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    return dict(
+        embed=dense_init(ke, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        layers=layers,
+        ln_f=jnp.ones((cfg.d_model,), dtype),
+        lm_head=dense_init(kh, (cfg.d_model, cfg.vocab), dtype),
+    )
+
+
+# ------------------------------------------------------------------ forward
+
+def _mlp_apply(p, x):
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ p["w_down"]
+
+
+def _block_apply(cfg, dist: Dist, moe_fn, blk, x, positions):
+    B, S, d = x.shape
+    # Megatron-SP: the residual stream (and thus every remat-saved carry)
+    # is sharded over (batch, seq); GSPMD all-gathers S inside attention and
+    # reduce-scatters after — 16x smaller saved activations per layer.
+    x = dist.constraint(x, P(dist.batch_axes, dist.model_axis, None))
+    h = attn_apply(blk["attn"], rms_norm(x, blk["ln1"]), cfg, positions,
+                   dist=dist)
+    x = x + h
+    u = rms_norm(x, blk["ln2"])
+    if cfg.moe:
+        if moe_fn is None:
+            y = moe_apply_local(blk["moe"], u.reshape(B * S, d), cfg)
+        else:
+            y = moe_fn(blk["moe"], u.reshape(B * S, d), cfg)
+        y = y.reshape(B, S, d)
+    else:
+        y = _mlp_apply(blk["mlp"], u)
+    return x + y
+
+
+def _run_stack(cfg, dist: Dist, params, x, positions):
+    moe_fn = (make_moe_sharded(dist.mesh, dist.batch_axes, dist.model_axis,
+                               chunk_mode="scan" if dist.scan_layers
+                               else "none")
+              if (cfg.moe and dist.mesh is not None) else None)
+    block = functools.partial(_block_apply, cfg, dist, moe_fn)
+    if dist.scan_layers:
+        fn = jax.checkpoint(block) if dist.remat else block
+
+        def body(carry, blk):
+            return fn(blk, carry, positions), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["layers"])
+            x = block(blk, x, positions)
+    return x
+
+
+def lm_logits(cfg, dist: Dist, params, tokens) -> jnp.ndarray:
+    """tokens int32[B,S] -> logits [B,S,V] (V sharded on model axis)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"][tokens]
+    # NB: constraining the gather output here was tried and REVERTED — it
+    # kills one 896MB all-gather but forces a pre-reshard that costs +31%
+    # on the memory term (EXPERIMENTS.md §Perf, V5: refuted).
+    x = _run_stack(cfg, dist, params, x, positions)
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return dist.constraint(logits, P(dist.batch_axes, None, dist.model_axis))
+
+
+def lm_loss(cfg, dist: Dist, params, batch) -> jnp.ndarray:
+    """Masked CE; label-logit via one-hot contraction (shards over V).
+
+    The one-hot tensor is explicitly constrained to the logits sharding —
+    without it GSPMD materializes [B,S,V] replicated over the model axis
+    (38 GB/device at 1M tokens x 152k vocab).
+    """
+    vspec = P(dist.batch_axes, None, dist.model_axis)
+    logits = lm_logits(cfg, dist, params, batch["tokens"])
+    logits = dist.constraint(logits, vspec)
+    # keep the [B,S,V] tensors in the model dtype; upcast only inside the
+    # reductions (their backward casts cotangents straight back to bf16, so
+    # no f32 [B,S,V]-sized tensors cross any collective)
+    m = jax.lax.stop_gradient(
+        jnp.max(logits, axis=-1, keepdims=True)).astype(logits.dtype)
+    z = logits - m
+    logz = (jnp.log(jnp.sum(jnp.exp(z.astype(jnp.float32)), axis=-1))
+            + m[..., 0].astype(jnp.float32))
+    onehot = jax.nn.one_hot(batch["labels"], cfg.vocab, dtype=logits.dtype)
+    onehot = dist.constraint(onehot, vspec)
+    gold = jnp.sum((onehot * logits).astype(jnp.float32), axis=-1)
+    mask = batch["mask"].astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------- decode
+
+def init_decode_state(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
+    """KV cache [L,B,S,KV,dh] ×2 + per-seq lengths (write positions)."""
+    dtype = dtype or DTYPES[cfg.dtype]
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                pos=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(cfg, dist: Dist, params, state, tokens_1) -> Tuple:
+    """One token per sequence: tokens_1 int32[B] -> (logits [B,V], state)."""
+    B = tokens_1.shape[0]
+    x = params["embed"][tokens_1][:, None, :]          # [B,1,d]
+    pos = state["pos"]
+
+    def body(x, inputs):
+        blk, ck, cv = inputs
+        h = rms_norm(x, blk["ln1"])
+        o, ck, cv = decode_attn_apply(blk["attn"], h, cfg, ck, cv, pos)
+        x = x + o
+        u = rms_norm(x, blk["ln2"])
+        if cfg.moe:
+            y = moe_apply_local(blk["moe"], u.reshape(B, -1), cfg,
+                                capacity_factor=2.0).reshape(B, 1, -1)
+        else:
+            y = _mlp_apply(blk["mlp"], u)
+        return x + y, (ck, cv)
+
+    kv_spec = P(dist.batch_axes, *([None] * 0))
+    if dist.scan_layers:
+        def sbody(carry, inputs):
+            x = carry
+            x, (ck, cv) = body(x, inputs)
+            return x, (ck, cv)
+        x, (k_new, v_new) = jax.lax.scan(
+            sbody, x, (params["layers"], state["k"], state["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ck, cv) = body(x, (blk, state["k"][i], state["v"][i]))
+            ks.append(ck)
+            vs.append(cv)
+        k_new = jnp.stack(ks)
+        v_new = jnp.stack(vs)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["lm_head"])[:, 0, :]
+    new_state = dict(k=k_new, v=v_new, pos=pos + 1)
+    return logits, new_state

@@ -1,0 +1,6 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedules import cosine_warmup
+from .compress import make_compressed_psum, ef_int8_roundtrip
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_warmup",
+           "make_compressed_psum", "ef_int8_roundtrip"]

@@ -1,0 +1,5 @@
+from .train_loop import TrainLoopConfig, make_train_step, run_training
+from .elastic import rebuild_mesh, elastic_restore
+
+__all__ = ["TrainLoopConfig", "make_train_step", "run_training",
+           "rebuild_mesh", "elastic_restore"]

@@ -1,0 +1,45 @@
+"""Elastic scaling: rebuild the mesh from the live device set and restore.
+
+On a real cluster the coordinator detects lost hosts, the job restarts with
+fewer (or more) slices, and this module (a) picks the largest usable
+(data, model) factorization of the surviving devices, (b) rebuilds
+shardings from the logical rules, (c) restores the latest checkpoint into
+the new shardings (``CheckpointManager.restore`` reshard path).  Checkpoints
+are host-numpy, so ANY mesh shape round-trips.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["rebuild_mesh", "elastic_restore"]
+
+
+def _best_factorization(n: int, prefer_model: int) -> Tuple[int, int]:
+    """Largest model dim <= prefer_model that divides n."""
+    for m in range(min(prefer_model, n), 0, -1):
+        if n % m == 0:
+            return n // m, m
+    return n, 1
+
+
+def rebuild_mesh(devices: Optional[Sequence] = None, prefer_model: int = 16,
+                 axis_names=("data", "model")):
+    devs = list(devices if devices is not None else jax.devices())
+    d, m = _best_factorization(len(devs), prefer_model)
+    import numpy as np
+    arr = np.array(devs[: d * m]).reshape(d, m)
+    return jax.sharding.Mesh(arr, axis_names)
+
+
+def elastic_restore(mgr, like, spec_tree, mesh):
+    """Latest checkpoint -> device arrays sharded for the NEW mesh."""
+    step = mgr.latest_step()
+    if step is None:
+        return None, 0
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    tree = mgr.restore(step, like, shardings)
+    return tree, step

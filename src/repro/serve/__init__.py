@@ -1,0 +1,3 @@
+from .kv_cache import PagedKVConfig, PagedKVState
+
+__all__ = ["PagedKVConfig", "PagedKVState"]

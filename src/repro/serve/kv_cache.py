@@ -1,0 +1,174 @@
+"""Paged KV cache with FBB/SQA/doubling/fixed growth policies.
+
+The paper's comparison re-run in the serving domain: a KV "postings list"
+per sequence grows one token at a time; pages (128-aligned KV tiles) are the
+chunks.  The growth policy decides how many pages to commit per allocation
+event (a *component*, in page units):
+
+* ``fixed``    — one page at a time (vLLM block manager);
+* ``doubling`` — components 1,2,4,8,... pages;
+* ``fbb``      — Fibonacci runs of Fibonacci-sized page runs (the paper);
+* ``sqa``      — SQ-array page runs + a dope vector (= the page table rows)
+                 with geometric regrowth accounting.
+
+Allocation is host-side (like vLLM's block manager) over a bump pool; the
+decode step itself is one jit: scatter the new token's K/V into its page,
+flash-decode across the sequence's pages (``kernels/paged_decode``).
+``page_report`` emits the paper-metric accounting (waste, pointer words,
+discards) in page units — ``benchmarks/paged_kv_bench.py`` sweeps policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.schedules import get_schedule
+from ..kernels.paged_decode import paged_decode
+from ..models.common import rms_norm, rotary, apply_rope
+
+__all__ = ["PagedKVConfig", "PagedKVState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    policy: str = "fbb"
+    page: int = 16                   # tokens per page
+    max_pages_per_seq: int = 64
+    n_pages: int = 1024              # global pool (pages)
+
+
+class PagedKVState:
+    """Host allocator + device pools.  One instance per serving batch."""
+
+    def __init__(self, cfg: PagedKVConfig, pools, page_table, lengths,
+                 committed, next_free, sched, events):
+        self.cfg = cfg
+        self.pools = pools                       # dict(k=[L,NP,pg,KV,dh], v=...)
+        self.page_table = page_table             # np.int32 [B, P]
+        self.lengths = lengths                   # np.int32 [B]
+        self.committed = committed               # np.int32 [B] pages committed
+        self.next_free = next_free               # bump pointer
+        self.sched = sched
+        self.events = events                     # allocation events counter
+
+    # ------------------------------------------------------------- create
+    @classmethod
+    def create(cls, cfg: PagedKVConfig, lm_cfg, batch: int,
+               dtype=jnp.float32) -> "PagedKVState":
+        L, KV, dh = lm_cfg.n_layers, lm_cfg.n_kv_heads, lm_cfg.d_head
+        pools = dict(
+            k=jnp.zeros((L, cfg.n_pages, cfg.page, KV, dh), dtype),
+            v=jnp.zeros((L, cfg.n_pages, cfg.page, KV, dh), dtype))
+        pt = np.full((batch, cfg.max_pages_per_seq), -1, np.int32)
+        sched = get_schedule(cfg.policy, cfg.max_pages_per_seq + 2,
+                             page=1)
+        return cls(cfg, pools, pt, np.zeros(batch, np.int32),
+                   np.zeros(batch, np.int32), 0, sched, 0)
+
+    # ---------------------------------------------------------- allocator
+    def _ensure_capacity(self) -> None:
+        """Commit page runs for every sequence crossing a page boundary."""
+        need_pages = self.lengths // self.cfg.page + 1   # pages needed now
+        for b in range(len(self.lengths)):
+            while self.committed[b] < need_pages[b]:
+                comp = int(self.sched.n_comp_for_len(int(self.committed[b]) + 1)) - 1
+                run = int(self.sched.sizes[comp])
+                run = min(run, self.cfg.max_pages_per_seq
+                          - int(self.committed[b]))
+                if run <= 0:
+                    raise RuntimeError("sequence exceeded max_pages_per_seq")
+                ids = np.arange(self.next_free, self.next_free + run)
+                if ids[-1] >= self.cfg.n_pages:
+                    raise RuntimeError("KV page pool exhausted")
+                self.page_table[b, self.committed[b]:
+                                self.committed[b] + run] = ids
+                self.next_free += run
+                self.committed[b] += run
+                self.events += 1
+
+    # -------------------------------------------------------------- decode
+    def decode(self, lm_cfg, dist, params, tokens_1):
+        """One decode step for the whole batch; returns (logits, self)."""
+        self._ensure_capacity()
+        pt = jnp.asarray(self.page_table)
+        lens = jnp.asarray(self.lengths)
+        logits, new_pools = _paged_decode_step(
+            lm_cfg, params, self.pools, pt, lens, tokens_1, self.cfg.page)
+        self.pools = new_pools
+        self.lengths = self.lengths + 1
+        return logits, self
+
+    # -------------------------------------------------------------- report
+    def page_report(self) -> Dict[str, float]:
+        used_tokens = int(self.lengths.sum())
+        committed = int(self.committed.sum())
+        waste_tokens = committed * self.cfg.page - used_tokens
+        n_comp = int(sum(self.sched.n_comp_for_len(int(c))
+                         for c in self.committed))
+        rep = dict(policy=self.cfg.policy, tokens=used_tokens,
+                   pages_committed=committed, waste_tokens=waste_tokens,
+                   components=n_comp, alloc_events=self.events)
+        if self.sched.has_dope:
+            idx = [int(self.sched.dope_cap_idx_for(
+                self.sched.n_comp_for_len(int(c)))) for c in self.committed]
+            caps = [int(self.sched.dope_caps[i]) for i in idx]
+            disc = [int(self.sched.dope_caps_cum[i - 1]) if i > 0 else 0
+                    for i in idx]
+            rep |= dict(dope_slots=sum(caps), dope_discarded=sum(disc))
+        else:
+            rep |= dict(next_ptrs=n_comp)
+        return rep
+
+
+def _paged_decode_step(lm_cfg, params, pools, page_table, lengths,
+                       tokens_1, page):
+    """jit-able: write K/V of the new token, flash-decode, project logits."""
+
+    @jax.jit
+    def run(params, k_pool, v_pool, pt, lens, toks):
+        B = toks.shape[0]
+        KV, dh, H = lm_cfg.n_kv_heads, lm_cfg.d_head, lm_cfg.n_heads
+        x = params["embed"][toks][:, None, :]
+        pos = lens
+        page_idx = pt[jnp.arange(B), lens // page]      # physical page
+        slot = lens % page
+
+        def layer(x, blk, kp, vp):
+            from ..models.attention import _qkv, _rope_qk
+            h = rms_norm(x, blk["ln1"])
+            q, k1, v1 = _qkv(blk["attn"], h, lm_cfg)
+            q, k1 = _rope_qk(q, k1, pos[:, None], lm_cfg)
+            # scatter the new token into its page
+            kp = kp.at[page_idx, slot].set(k1[:, 0], mode="drop")
+            vp = vp.at[page_idx, slot].set(v1[:, 0], mode="drop")
+            o = paged_decode(q[:, 0].reshape(B, H, dh), kp, vp, pt,
+                             lens + 1)
+            o = o.reshape(B, 1, H * dh) @ blk["attn"]["wo"]
+            x = x + o
+            u = rms_norm(x, blk["ln2"])
+            if lm_cfg.moe:
+                from ..models.moe import moe_apply_local
+                y = moe_apply_local(blk["moe"], u.reshape(B, -1), lm_cfg,
+                                    capacity_factor=2.0).reshape(B, 1, -1)
+            else:
+                from ..models.transformer import _mlp_apply
+                y = _mlp_apply(blk["mlp"], u)
+            return x + y, kp, vp
+
+        ks, vs = [], []
+        for i in range(lm_cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kp, vp = layer(x, blk, k_pool[i], v_pool[i])
+            ks.append(kp)
+            vs.append(vp)
+        x = rms_norm(x, params["ln_f"])
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, jnp.stack(ks), jnp.stack(vs)
+
+    logits, k_new, v_new = run(params, pools["k"], pools["v"], page_table,
+                               lengths, tokens_1)
+    return logits, dict(k=k_new, v=v_new)

@@ -1,0 +1,3 @@
+from .rules import lm_param_specs, batch_specs, decode_state_specs
+
+__all__ = ["lm_param_specs", "batch_specs", "decode_state_specs"]

@@ -1,0 +1,93 @@
+"""PartitionSpec rules: logical param/activation axes -> mesh axes.
+
+Scheme (single pod (data=16, model=16); multi-pod folds 'pod' into the
+batch/FSDP axes):
+
+* DP/FSDP   — batch on batch_axes; large 2-D weights additionally sharded on
+              batch_axes (FSDP: stored sharded, all-gathered at use by GSPMD;
+              optimizer state inherits the same spec = ZeRO).
+* TP        — attention heads / FFN hidden / vocab on ``model``.
+* EP        — MoE experts on the batch axes (E rows), expert hidden on
+              ``model`` — matches ``models/moe.make_moe_sharded``.
+* SP        — long-context decode shards the KV sequence axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["lm_param_specs", "batch_specs", "decode_state_specs"]
+
+
+def lm_param_specs(cfg, batch_axes: Tuple[str, ...] = ("data",),
+                   model_axis: str = "model", fsdp: bool = True) -> Dict:
+    """Pytree of PartitionSpec mirroring ``transformer.init_lm`` output.
+
+    Stacked layer params carry a leading (layers) dim -> spec None first.
+    """
+    f = batch_axes if fsdp else None
+    m = model_axis
+
+    attn = dict(
+        wq=P(None, f, m), wk=P(None, f, m), wv=P(None, f, m),
+        wo=P(None, m, f),
+    )
+    if cfg.qkv_bias:
+        attn |= dict(bq=P(None, m), bk=P(None, m), bv=P(None, m))
+    if cfg.qk_norm:
+        attn |= dict(q_norm=P(None, None), k_norm=P(None, None))
+
+    if cfg.moe:
+        ffn = dict(moe=dict(
+            wg=P(None, None, None),
+            w_gate=P(None, batch_axes, None, m),
+            w_up=P(None, batch_axes, None, m),
+            w_down=P(None, batch_axes, m, None),
+        ))
+    else:
+        ffn = dict(mlp=dict(
+            w_gate=P(None, f, m), w_up=P(None, f, m), w_down=P(None, m, f)))
+
+    layers = dict(ln1=P(None, None), ln2=P(None, None), attn=attn) | ffn
+    return dict(
+        embed=P(None, m),
+        layers=layers,
+        ln_f=P(None),
+        lm_head=P(None, m),
+    )
+
+
+def batch_specs(kind: str, batch_axes: Tuple[str, ...] = ("data",)) -> Dict:
+    if kind == "train":
+        return dict(tokens=P(batch_axes, None), labels=P(batch_axes, None),
+                    mask=P(batch_axes, None))
+    if kind == "prefill":
+        return dict(tokens=P(batch_axes, None))
+    if kind == "decode":
+        return dict(tokens=P(batch_axes))
+    raise ValueError(kind)
+
+
+def decode_state_specs(batch: int, batch_axes: Tuple[str, ...],
+                       model_axis: str, seq_axes: Tuple[str, ...] = ()
+                       ) -> Dict:
+    """KV cache [L,B,S,KV,dh]: batch on batch_axes; SP shards S.
+
+    For ``long_500k`` (batch=1) the batch axes can't shard batch, so the
+    sequence axis takes BOTH axes (split-K decode).
+    """
+    if seq_axes:
+        kv = P(None, None, seq_axes, None, None)
+    else:
+        kv = P(None, batch_axes, model_axis, None, None)
+    return dict(k=kv, v=kv,
+                pos=P(batch_axes) if batch > 1 else P())
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+"""Test fixtures: make sibling test helpers (oracle.py) importable.
+
+NB: deliberately does NOT set any XLA device-count flags — smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,64 @@
+"""Pure-Python reference implementations (oracles) for the paper's methods."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+class OracleIndex:
+    """Dict-of-lists inverted index — ground truth for postings content."""
+
+    def __init__(self) -> None:
+        self.lists: Dict[int, List[int]] = defaultdict(list)
+
+    def append_batch(self, terms: Sequence[int], docs: Sequence[int]) -> None:
+        for t, d in zip(terms, docs):
+            if t >= 0:
+                self.lists[int(t)].append(int(d))
+
+    def postings(self, term: int) -> List[int]:
+        return self.lists.get(term, [])
+
+    @property
+    def total_postings(self) -> int:
+        return sum(len(v) for v in self.lists.values())
+
+    def checksum(self) -> int:
+        s = 0
+        for v in self.lists.values():
+            s += sum(v)
+        return s & 0xFFFFFFFF
+
+
+def oracle_paper_cost(schedule, lengths: np.ndarray) -> dict:
+    """Literal per-list cost accounting, looping component by component.
+
+    Slow but independent of the vectorized cost model — used by hypothesis
+    tests to cross-check ``core.cost_model``.
+    """
+    out = []
+    for l in lengths:
+        l = int(l)
+        alloc = n = 0
+        while alloc < l:
+            alloc += int(schedule.sizes[n])
+            n += 1
+        if schedule.has_next_ptr:
+            cost = (alloc - l) + n + 2
+            out.append((n, alloc, cost, None))
+        else:
+            ci = 0
+            discarded = 0
+            while schedule.dope_caps[ci] < n:
+                discarded += int(schedule.dope_caps[ci])
+                ci += 1
+            cost_b = (alloc - l) + int(schedule.dope_caps[ci]) + 1
+            out.append((n, alloc, cost_b, cost_b + discarded))
+    return dict(
+        n_comp=np.array([o[0] for o in out]),
+        alloc=np.array([o[1] for o in out]),
+        cost=np.array([o[2] for o in out]),
+        cost_a=np.array([o[3] for o in out], dtype=object),
+    )

@@ -1,0 +1,112 @@
+"""Data substrate: determinism, Zipf shape, prefetch, tokenizer, sampler."""
+import numpy as np
+import pytest
+
+from repro.data.synthacorpus import SynthConfig, generate_corpus, corpus_stats
+from repro.data.pipeline import BatchSpec, token_batches, lm_batches, Prefetcher
+from repro.data.tokenizer import HashTokenizer
+from repro.models.gnn_common import csr_from_edges, NeighborSampler
+
+
+def test_corpus_deterministic():
+    cfg = SynthConfig(vocab=1000, n_postings=50_000, seed=42)
+    a = [t for t, _ in generate_corpus(cfg)]
+    b = [t for t, _ in generate_corpus(cfg)]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_corpus_zipf_head():
+    cfg = SynthConfig(vocab=10_000, n_postings=200_000, zipf_alpha=1.07,
+                      seed=1)
+    counts = np.zeros(cfg.vocab, np.int64)
+    for t, _ in generate_corpus(cfg):
+        counts += np.bincount(t, minlength=cfg.vocab)
+    top = np.sort(counts)[::-1]
+    # Zipf: rank-1 term much hotter than rank-100, which beats rank-5000
+    assert top[0] > 5 * top[99] > 5 * top[4999]
+
+
+def test_docs_monotone_and_short_records():
+    cfg = SynthConfig(vocab=100, n_postings=30_000, mean_rec_len=3.0,
+                      seed=2)
+    stats = corpus_stats(cfg)
+    mean_len = stats["postings"] / stats["records"]
+    assert 2.0 < mean_len < 4.5
+    for _, docs in generate_corpus(cfg):
+        assert (np.diff(docs) >= 0).all()
+
+
+def test_step_batches_deterministic_and_disjoint_workers():
+    spec0 = BatchSpec(batch=128, vocab=500, seed=9, n_workers=4, worker=0)
+    spec1 = BatchSpec(batch=128, vocab=500, seed=9, n_workers=4, worker=1)
+    f0, f1 = token_batches(spec0), token_batches(spec1)
+    t0a, _ = f0(5)
+    t0b, _ = f0(5)
+    t1, _ = f1(5)
+    np.testing.assert_array_equal(t0a, t0b)           # pure fn of step
+    assert not np.array_equal(t0a, t1)                # workers differ
+
+
+def test_prefetcher_order_and_stop():
+    pf = Prefetcher(lambda s: s * s, start=3, depth=2, stop_at=7)
+    out = list(pf)
+    assert out == [(3, 9), (4, 16), (5, 25), (6, 36)]
+
+
+def test_prefetcher_surfaces_errors():
+    def bad(step):
+        if step == 2:
+            raise RuntimeError("boom")
+        return step
+    pf = Prefetcher(bad, stop_at=5)
+    with pytest.raises(RuntimeError, match="boom"):
+        list(pf)
+
+
+def test_tokenizer_stable_and_in_range():
+    tok = HashTokenizer(1 << 16)
+    a = tok.encode("The Quick Brown Fox")
+    b = tok.encode("the quick brown fox")
+    assert a == b                                     # case folded
+    assert all(0 <= t < (1 << 16) for t in a)
+    terms, docs = tok.invert_records(["a b", "c"], doc0=7)
+    assert docs.tolist() == [7, 7, 8]
+
+
+def test_neighbor_sampler_shapes_and_membership():
+    rng = np.random.default_rng(0)
+    n, e = 500, 4000
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    indptr, indices = csr_from_edges(src, dst, n)
+    assert indptr[-1] == e
+    s = NeighborSampler(indptr, indices, seed=1)
+    seeds = rng.choice(n, 32, replace=False)
+    g = s.sample(seeds, fanouts=(5, 3), n_pad=1024, e_pad=1024)
+    assert g.pos.shape == (1024, 3)
+    assert g.edge_src.shape == (1024,)
+    ne = int(np.asarray(g.edge_mask).sum())
+    assert 0 < ne <= 32 * 5 + 32 * 5 * 3
+    # every sampled edge is a real edge of the base graph (relabelled) —
+    # spot-check membership via degree bound
+    assert int(np.asarray(g.node_mask).sum()) >= len(seeds)
+
+
+def test_csr_via_inversion_engine_matches_numpy():
+    from repro.models.gnn_common import csr_via_index
+    from repro.core.query import make_postings_fn
+    import jax
+    rng = np.random.default_rng(3)
+    n, e = 64, 512
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    indptr, indices = csr_from_edges(src, dst, n)
+    state, cfg = csr_via_index(src, dst, n, method="fbb", batch=128)
+    fn = jax.jit(make_postings_fn(cfg, 256))
+    for v in range(n):
+        vals, cnt = fn(state, v)
+        expect = indices[indptr[v]:indptr[v + 1]]
+        assert int(cnt) == len(expect)
+        np.testing.assert_array_equal(np.sort(np.asarray(vals)[:len(expect)]),
+                                      np.sort(expect))

@@ -1,0 +1,178 @@
+"""Inversion engine vs the pure-Python oracle, both methods, many regimes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.pool import IndexConfig, init_state, paper_memory_report
+from repro.core.inversion import make_append_fn
+from repro.core.query import make_postings_fn
+from repro.core.traversal import make_traverse_fn
+from repro.core.schedules import get_schedule
+
+from oracle import OracleIndex
+
+
+def make_cfg(method, vocab=64, pool_words=1 << 16, max_chunks=4096,
+             dope_words=1 << 14, **kw):
+    return IndexConfig(method=method, vocab=vocab, pool_words=pool_words,
+                       max_chunks=max_chunks, dope_words=dope_words,
+                       max_len_per_term=1 << 20, **kw)
+
+
+def run_both(method, batches, vocab=64, **kw):
+    cfg = make_cfg(method, vocab=vocab, **kw)
+    step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+    state = init_state(cfg)
+    oracle = OracleIndex()
+    for terms, docs in batches:
+        terms = np.asarray(terms, np.int32)
+        docs = np.asarray(docs, np.int32)
+        state = step(state, jnp.asarray(terms), jnp.asarray(docs))
+        ok = (terms >= 0) & (terms < vocab)   # engine's validity rule
+        oracle.append_batch(np.where(ok, terms, -1), docs)
+    return cfg, state, oracle
+
+
+def check_postings(cfg, state, oracle, max_out=2048):
+    fn = jax.jit(make_postings_fn(cfg, max_out))
+    for term in sorted(oracle.lists):
+        vals, n = fn(state, term)
+        expect = oracle.postings(term)
+        assert int(n) == len(expect), f"term {term} length"
+        np.testing.assert_array_equal(
+            np.asarray(vals)[: len(expect)], expect,
+            err_msg=f"term {term} ({cfg.method})")
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa", "sqa_linear", "doubling"])
+def test_single_batch(method):
+    rng = np.random.default_rng(0)
+    terms = rng.integers(0, 16, size=512)
+    docs = np.arange(512)
+    cfg, state, oracle = run_both(method, [(terms, docs)], vocab=16)
+    check_postings(cfg, state, oracle)
+    assert int(state["overflow"]) == 0
+    assert int(state["total_postings"]) == oracle.total_postings
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_many_small_batches(method):
+    rng = np.random.default_rng(1)
+    batches = []
+    doc = 0
+    for _ in range(30):
+        b = int(rng.integers(1, 64))
+        terms = rng.integers(0, 32, size=b)
+        docs = np.arange(doc, doc + b)
+        doc += b
+        batches.append((terms, docs))
+    cfg, state, oracle = run_both(method, batches, vocab=32)
+    check_postings(cfg, state, oracle)
+    assert int(state["overflow"]) == 0
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_skewed_zipf(method):
+    rng = np.random.default_rng(2)
+    batches = []
+    doc = 0
+    for _ in range(10):
+        terms = np.minimum(rng.zipf(1.3, size=1024) - 1, 63)
+        docs = np.arange(doc, doc + 1024)
+        doc += 1024
+        batches.append((terms, docs))
+    cfg, state, oracle = run_both(
+        method, batches, vocab=64, pool_words=1 << 17)
+    check_postings(cfg, state, oracle, max_out=8192)
+    assert int(state["overflow"]) == 0
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_invalid_terms_dropped(method):
+    terms = np.array([0, -1, 3, 99999, 3, -5, 0], np.int32)
+    docs = np.arange(7, dtype=np.int32)
+    cfg, state, oracle = run_both(method, [(terms, docs)], vocab=16)
+    check_postings(cfg, state, oracle)
+    assert int(state["total_postings"]) == 4
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_single_term_long_list(method):
+    # one term crossing many component boundaries, incl. dope regrowths
+    batches = []
+    doc = 0
+    for _ in range(20):
+        batches.append((np.zeros(257, np.int32), np.arange(doc, doc + 257)))
+        doc += 257
+    cfg, state, oracle = run_both(method, batches, vocab=4,
+                                  pool_words=1 << 15)
+    check_postings(cfg, state, oracle, max_out=8192)
+    sched = get_schedule(method, 1 << 20)
+    assert int(state["n_comp"][0]) == int(sched.n_comp_for_len(doc))
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_traversal_checksum(method):
+    rng = np.random.default_rng(3)
+    batches = []
+    doc = 0
+    for _ in range(8):
+        terms = rng.integers(0, 48, size=512)
+        docs = np.arange(doc, doc + 512)
+        doc += 512
+        batches.append((terms, docs))
+    cfg, state, oracle = run_both(method, batches, vocab=48)
+    acc, cnt = jax.jit(make_traverse_fn(cfg, tile=1 << 12))(state)
+    assert int(cnt) == oracle.total_postings
+    assert int(np.uint32(np.int64(int(acc)))) == oracle.checksum()
+
+
+def test_paper_memory_report_matches_cost_model():
+    # build one list of known length; report must equal the analytic curves
+    from repro.core.cost_model import method_curves
+    L = 3000
+    for method in ("fbb", "sqa"):
+        cfg = make_cfg(method, vocab=4, pool_words=1 << 14)
+        step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+        state = init_state(cfg)
+        done = 0
+        while done < L:
+            b = min(512, L - done)
+            state = step(state, jnp.zeros(b, jnp.int32),
+                         jnp.arange(done, done + b, dtype=jnp.int32))
+            done += b
+        rep = paper_memory_report(state, cfg)
+        curves = method_curves(get_schedule(method, 1 << 20), L)
+        assert rep["n_components"] == int(curves.n_comp[-1])
+        assert rep["alloc_words"] == int(curves.alloc[-1])
+        if method == "fbb":
+            # report counts 2 ptrs/vocab-entry over the whole vocab table
+            expect = int(curves.cost[-1]) - 2 + 2 * cfg.vocab
+            assert rep["total_cost"] == expect
+        else:
+            expect_b = int(curves.cost[-1]) - 1 + cfg.vocab
+            expect_a = int(curves.cost_a[-1]) - 1 + cfg.vocab
+            assert rep["total_cost_b"] == expect_b
+            assert rep["total_cost_a"] == expect_a
+
+
+@pytest.mark.parametrize("method", ["fbb", "sqa"])
+def test_alignment_accounting(method):
+    # align=128: alloc_words (paper metric) unchanged, buf_used grows
+    rng = np.random.default_rng(4)
+    terms = rng.integers(0, 8, size=1024)
+    docs = np.arange(1024)
+    cfg_a = make_cfg(method, vocab=8, align=128, pool_words=1 << 17)
+    cfg_b = make_cfg(method, vocab=8, align=1, pool_words=1 << 17)
+    sa = jax.jit(make_append_fn(cfg_a), donate_argnums=0)(
+        init_state(cfg_a), jnp.asarray(terms), jnp.asarray(docs))
+    sb = jax.jit(make_append_fn(cfg_b), donate_argnums=0)(
+        init_state(cfg_b), jnp.asarray(terms), jnp.asarray(docs))
+    assert int(sa["alloc_words"]) == int(sb["alloc_words"])
+    assert int(sa["buf_used"]) >= int(sb["buf_used"])
+    assert int(sa["buf_used"]) % 128 == 0
+    cfgq = make_cfg(method, vocab=8, align=128, pool_words=1 << 17)
+    check = OracleIndex()
+    check.append_batch(terms, docs)
+    check_postings(cfg_a, sa, check, max_out=2048)

@@ -1,0 +1,81 @@
+"""Hypothesis property tests for the inversion engine itself."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pool import IndexConfig, init_state, paper_memory_report
+from repro.core.inversion import make_append_fn
+from repro.core.query import make_postings_fn
+from repro.core.schedules import get_schedule
+
+from oracle import OracleIndex
+
+BATCHES = st.lists(
+    st.tuples(st.integers(min_value=1, max_value=96),   # batch size
+              st.integers(min_value=0, max_value=2**31 - 1)),  # seed
+    min_size=1, max_size=5)
+
+
+def _run(method, batches, vocab=24):
+    cfg = IndexConfig(method=method, vocab=vocab, pool_words=1 << 14,
+                      max_chunks=1 << 12, dope_words=1 << 12,
+                      max_len_per_term=1 << 20)
+    step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+    state = init_state(cfg)
+    oracle = OracleIndex()
+    doc = 0
+    for b, seed in batches:
+        rng = np.random.default_rng(seed)
+        terms = rng.integers(-1, vocab, b).astype(np.int32)
+        docs = np.arange(doc, doc + b, dtype=np.int32)
+        doc += b
+        state = step(state, jnp.asarray(terms), jnp.asarray(docs))
+        oracle.append_batch(terms, docs)
+    return cfg, state, oracle
+
+
+@settings(max_examples=25, deadline=None)
+@given(BATCHES, st.sampled_from(["fbb", "sqa"]))
+def test_engine_matches_oracle_any_batching(batches, method):
+    cfg, state, oracle = _run(method, batches)
+    assert int(state["overflow"]) == 0
+    assert int(state["total_postings"]) == oracle.total_postings
+    fn = jax.jit(make_postings_fn(cfg, 512))
+    for term in oracle.lists:
+        vals, n = fn(state, term)
+        expect = oracle.postings(term)
+        assert int(n) == len(expect)
+        np.testing.assert_array_equal(np.asarray(vals)[: len(expect)],
+                                      expect)
+
+
+@settings(max_examples=25, deadline=None)
+@given(BATCHES, st.sampled_from(["fbb", "sqa"]))
+def test_state_invariants(batches, method):
+    """Structural invariants hold under ANY batch partitioning."""
+    cfg, state, oracle = _run(method, batches)
+    sched = get_schedule(method, 1 << 20)
+    lengths = np.asarray(state["length"])
+    n_comp = np.asarray(state["n_comp"])
+    for t, l in enumerate(lengths):
+        if l > 0:
+            assert n_comp[t] == int(sched.n_comp_for_len(int(l)))
+    # allocation accounting: alloc_words == sum of per-term allocations
+    expect_alloc = sum(int(sched.alloc_for_len(int(l)))
+                       for l in lengths if l > 0)
+    assert int(state["alloc_words"]) == expect_alloc
+    assert int(state["n_comp_total"]) == int(n_comp[lengths > 0].sum())
+    rep = paper_memory_report(state, cfg)
+    assert rep["waste_words"] >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(BATCHES)
+def test_fbb_sqa_identical_content(batches):
+    """Both methods index the same stream to identical postings."""
+    _, s1, _ = _run("fbb", batches)
+    cfg2, s2, _ = _run("sqa", batches)
+    np.testing.assert_array_equal(np.asarray(s1["length"]),
+                                  np.asarray(s2["length"]))
+    assert int(s1["total_postings"]) == int(s2["total_postings"])

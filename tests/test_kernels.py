@@ -1,0 +1,138 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram import histogram, histogram_ref
+from repro.kernels.chunk_gather import gather_tiles, gather_tiles_ref
+from repro.kernels.segment_bag import segment_bag, segment_bag_ref
+from repro.kernels.paged_decode import paged_decode, paged_decode_ref
+from repro.kernels.flash_attention import (flash_attention, attention_ref,
+                                           chunked_attention_ref)
+
+
+# ---------------------------------------------------------------- histogram
+@pytest.mark.parametrize("n,vocab", [(512, 64), (1024, 512), (777, 100),
+                                     (4096, 1000)])
+def test_histogram_sweep(n, vocab):
+    rng = np.random.default_rng(n + vocab)
+    ids = jnp.asarray(rng.integers(-1, vocab, size=n), jnp.int32)
+    got = histogram(ids, vocab, use_pallas=True, interpret=True,
+                    bn=256, bv=128)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(histogram_ref(ids, vocab)))
+
+
+# ------------------------------------------------------------- chunk_gather
+@pytest.mark.parametrize("p,t", [(16, 8), (64, 64), (128, 3)])
+def test_chunk_gather_sweep(p, t):
+    rng = np.random.default_rng(p * t)
+    pool = jnp.asarray(rng.integers(0, 1 << 20, size=(p * 128,)), jnp.int32)
+    tiles = jnp.asarray(rng.integers(0, p, size=t), jnp.int32)
+    got = gather_tiles(pool, tiles, use_pallas=True, interpret=True)
+    want = gather_tiles_ref(pool.reshape(-1, 128), tiles)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -------------------------------------------------------------- segment_bag
+@pytest.mark.parametrize("b,l,v,d", [(8, 4, 100, 128), (16, 7, 1000, 256),
+                                     (4, 1, 32, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_segment_bag_sweep(b, l, v, d, dtype):
+    rng = np.random.default_rng(b * l + d)
+    table = jnp.asarray(rng.standard_normal((v, d)), dtype)
+    ids = rng.integers(0, v, size=(b, l)).astype(np.int32)
+    ids[rng.random((b, l)) < 0.3] = -1                # padding
+    ids = jnp.asarray(ids)
+    got = segment_bag(table, ids, use_pallas=True, interpret=True)
+    want = segment_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_segment_bag_mean_mode():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.standard_normal((50, 128)), jnp.float32)
+    ids = jnp.asarray([[0, 1, -1, -1], [5, -1, -1, -1]], jnp.int32)
+    got = segment_bag(table, ids, mode="mean", use_pallas=True,
+                      interpret=True)
+    want = segment_bag_ref(table, ids, mode="mean")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------------------- paged_decode
+@pytest.mark.parametrize("b,h,kvh,d,page,pages", [
+    (2, 4, 2, 128, 16, 4), (1, 8, 1, 128, 8, 6), (3, 4, 4, 256, 32, 2)])
+def test_paged_decode_sweep(b, h, kvh, d, page, pages):
+    rng = np.random.default_rng(h * d + page)
+    NP = b * pages + 4
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NP, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, page, kvh, d)), jnp.float32)
+    pt = jnp.asarray(rng.permutation(NP)[: b * pages].reshape(b, pages),
+                     jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, pages * page + 1, size=b),
+                          jnp.int32)
+    got = paged_decode(q, kp, vp, pt, lengths, use_pallas=True,
+                       interpret=True)
+    want = paged_decode_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_bf16():
+    rng = np.random.default_rng(5)
+    b, h, kvh, d, page, pages = 2, 4, 2, 128, 16, 3
+    NP = b * pages
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.bfloat16)
+    kp = jnp.asarray(rng.standard_normal((NP, page, kvh, d)), jnp.bfloat16)
+    vp = jnp.asarray(rng.standard_normal((NP, page, kvh, d)), jnp.bfloat16)
+    pt = jnp.arange(NP, dtype=jnp.int32).reshape(b, pages)
+    lengths = jnp.asarray([page * pages, page + 3], jnp.int32)
+    got = paged_decode(q, kp, vp, pt, lengths, use_pallas=True,
+                       interpret=True)
+    want = paged_decode_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("b,h,kvh,s,d,causal", [
+    (1, 2, 2, 256, 128, True), (2, 4, 2, 256, 128, True),
+    (1, 4, 1, 512, 128, True), (1, 2, 2, 256, 128, False)])
+def test_flash_attention_sweep(b, h, kvh, s, d, causal):
+    rng = np.random.default_rng(s + d + h)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kvh, s, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kvh, s, d)) * 0.5, jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, impl="pallas", bq=128,
+                          bk=128, interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,chunk", [(256, 64), (512, 128), (1024, 1024)])
+def test_chunked_attention_matches_dense(s, chunk):
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.standard_normal((1, 4, s, 64)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, s, 64)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, s, 64)) * 0.5, jnp.float32)
+    got = chunked_attention_ref(q, k, v, causal=True, chunk=chunk)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 128)) * 0.5, jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 128)) * 0.5, jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 128)) * 0.5, jnp.bfloat16)
+    got = flash_attention(q, k, v, impl="pallas", interpret=True)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,64 @@
+"""E(3)-equivariance property tests for NequIP (hypothesis rotations)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.gnn_common import random_graph
+from repro.models.nequip import init_nequip, nequip_energy_forces
+
+
+def _setup():
+    cfg = get_config("nequip")
+    params = init_nequip(cfg, jax.random.PRNGKey(0))
+    g = random_graph(jax.random.PRNGKey(1), 32, 96, box=6.0)
+    return cfg, params, g
+
+
+CFG, PARAMS, G = _setup()
+E0, F0 = nequip_energy_forces(CFG, PARAMS, G)
+
+
+def _rotation(seed: int) -> np.ndarray:
+    a = np.random.default_rng(seed).standard_normal((3, 3))
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_energy_invariant_forces_equivariant(seed):
+    R = _rotation(seed)
+    g2 = dataclasses.replace(G, pos=G.pos @ jnp.asarray(R.T, jnp.float32))
+    e2, f2 = nequip_energy_forces(CFG, PARAMS, g2)
+    np.testing.assert_allclose(np.asarray(e2), np.asarray(E0),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(f2),
+                               np.asarray(F0) @ R.T, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=-5.0, max_value=5.0))
+def test_translation_invariance(seed, shift):
+    t = jnp.asarray(np.random.default_rng(seed).standard_normal(3) * shift,
+                    jnp.float32)
+    g2 = dataclasses.replace(G, pos=G.pos + t)
+    e2, f2 = nequip_energy_forces(CFG, PARAMS, g2)
+    np.testing.assert_allclose(np.asarray(e2), np.asarray(E0),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(F0),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_forces_sum_to_zero():
+    """Newton's third law: internal forces cancel (translation symmetry)."""
+    np.testing.assert_allclose(np.asarray(F0).sum(0), np.zeros(3),
+                               atol=1e-4)

@@ -1,0 +1,64 @@
+"""End-to-end system behaviour: corpus -> both indexes -> identical content,
+paper-metric memory ordering, and query correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IndexConfig, init_state, make_append_fn,
+                        make_traverse_fn, make_postings_fn,
+                        paper_memory_report)
+from repro.data.synthacorpus import SynthConfig, generate_corpus
+from repro.data.tokenizer import HashTokenizer
+
+
+def build(method, corpus):
+    cfg = IndexConfig(method=method, vocab=corpus.vocab,
+                      pool_words=int(corpus.n_postings * 2.5) + (1 << 14),
+                      max_chunks=corpus.n_postings + (1 << 12),
+                      dope_words=corpus.n_postings + (1 << 12),
+                      max_len_per_term=1 << 22)
+    step = jax.jit(make_append_fn(cfg), donate_argnums=0)
+    state = init_state(cfg)
+    for terms, docs in generate_corpus(corpus):
+        if len(terms) < corpus.batch:
+            terms = np.pad(terms, (0, corpus.batch - len(terms)),
+                           constant_values=-1)
+            docs = np.pad(docs, (0, corpus.batch - len(docs)))
+        state = step(state, jnp.asarray(terms, jnp.int32),
+                     jnp.asarray(docs, jnp.int32))
+    return cfg, state
+
+
+def test_end_to_end_corpus_inversion():
+    corpus = SynthConfig(vocab=2048, n_postings=60_000, seed=5,
+                         batch=1 << 13)
+    results = {}
+    for method in ("fbb", "sqa"):
+        cfg, state = build(method, corpus)
+        acc, cnt = jax.jit(make_traverse_fn(cfg, tile=1 << 13))(state)
+        rep = paper_memory_report(state, cfg)
+        results[method] = (int(acc), int(cnt), rep)
+        assert int(state["overflow"]) == 0
+        assert int(state["total_postings"]) == corpus.n_postings
+
+    # identical indexed content
+    assert results["fbb"][0] == results["sqa"][0]      # checksum
+    assert results["fbb"][1] == results["sqa"][1] == corpus.n_postings
+    # the paper's memory ordering: SQA(A) >= FBB total words at this scale
+    fbb_total = results["fbb"][2]["total_words"]
+    sqa_total = results["sqa"][2]["total_words_a"]
+    assert sqa_total >= fbb_total * 0.95               # within engine noise
+
+
+def test_end_to_end_text_query():
+    tok = HashTokenizer(1 << 14)
+    records = [f"document number {i} about topic{i % 7}" for i in range(50)]
+    terms, docs = tok.invert_records(records)
+    cfg = IndexConfig(method="fbb", vocab=1 << 14, pool_words=1 << 13,
+                      max_chunks=1 << 12, dope_words=1 << 12)
+    state = jax.jit(make_append_fn(cfg), donate_argnums=0)(
+        init_state(cfg), jnp.asarray(terms), jnp.asarray(docs))
+    q = tok.encode("topic3")[0]
+    vals, n = jax.jit(make_postings_fn(cfg, 64))(state, q)
+    expect = [i for i in range(50) if i % 7 == 3]
+    assert np.asarray(vals)[: int(n)].tolist() == expect
